@@ -1,0 +1,104 @@
+"""Aggregate dry-run cell JSONs into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--dir experiments/dryrun]
+      [--mesh pod] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_cells(d: str):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_t(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(cells, mesh: str, markdown: bool):
+    rows = []
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c.get("profile", "baseline") != "baseline":
+            continue  # §Perf profile runs are reported separately
+        if c.get("status") == "skipped":
+            rows.append((c["arch"], c["shape"], "SKIPPED", "-", "-", "-", "-", "-",
+                         c.get("reason", "")[:46]))
+            continue
+        if c.get("status") != "ok":
+            rows.append((c["arch"], c["shape"], c.get("status", "?"),
+                         "-", "-", "-", "-", "-", ""))
+            continue
+        dom = c["bottleneck"]
+        rows.append((
+            c["arch"], c["shape"], dom,
+            fmt_t(c["t_compute"]), fmt_t(c["t_memory"]), fmt_t(c["t_collective"]),
+            f"{c['roofline_fraction']:.3f}",
+            f"{c['useful_flops_ratio']:.2f}",
+            what_moves(c),
+        ))
+    rows.sort()
+    hdr = ("arch", "shape", "bottleneck", "t_comp", "t_mem", "t_coll",
+           "roofline", "useful", "what moves the dominant term")
+    widths = [max(len(str(r[i])) for r in rows + [hdr]) for i in range(len(hdr))]
+    sep = " | " if markdown else "  "
+    lines = [sep.join(str(h).ljust(w) for h, w in zip(hdr, widths))]
+    if markdown:
+        lines.insert(0, "")
+        lines.append(sep.join("-" * w for w in widths))
+        lines[0], lines[-1] = lines[-1], lines[0]
+        lines = [lines[1], lines[0]] + lines[2:]
+    for r in rows:
+        lines.append(sep.join(str(v).ljust(w) for v, w in zip(r, widths)))
+    return "\n".join(lines)
+
+
+def what_moves(c) -> str:
+    """One phrase on what would move the dominant term down."""
+    dom = c["bottleneck"]
+    kinds = c.get("coll_by_kind", {})
+    if dom == "collective":
+        big = max(kinds, key=kinds.get) if kinds else "?"
+        if big == "all-reduce":
+            return "cut TP act all-reduce (seq-par / FSDP-only / a2a emb)"
+        if big == "all-gather":
+            return "overlap FSDP gathers; bigger per-device shards"
+        if big == "all-to-all":
+            return "lower MoE capacity factor; fuse a2a"
+        return f"reduce {big}"
+    if dom == "memory":
+        if c["shape"].startswith(("decode", "long")):
+            return "KV-cache quant/bf16; fuse decode attn reads"
+        return "flash-attn remat policy; bf16 intermediates; fuse"
+    return "larger per-chip tiles; reduce remat recompute"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", nargs="+", default=["pod", "multipod"])
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    for m in args.mesh:
+        print(f"\n=== mesh: {m} ===")
+        print(table(cells, m, args.markdown))
+
+
+if __name__ == "__main__":
+    main()

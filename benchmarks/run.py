@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper figure/table plus the
+roofline report.  Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is a fast mode sized for CI; ``--full`` reproduces the paper's
+exact sweep sizes (M=1000, D=100, N=5..50, all three datasets).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args, _ = ap.parse_known_args()
+    fast = not args.full
+
+    from benchmarks import fig1_speedup, fig2_reference, fig3_tradeoff
+
+    print("# Figure 1: original greedy MAP vs Div-DPP (speedup, exactness)")
+    fig1_speedup.main(fast_mode=fast)
+    print("# Figure 2: MMR / Greedy / Div-DPP runtime")
+    fig2_reference.main(fast_mode=fast)
+    print("# Figure 3: accuracy-diversity trade-off")
+    fig3_tradeoff.main(fast_mode=fast)
+
+    print("# Roofline (from dry-run artifacts, if present)")
+    try:
+        from benchmarks import roofline_report
+
+        cells = roofline_report.load_cells("experiments/dryrun")
+        if cells:
+            ok = sum(1 for c in cells if c.get("status") == "ok")
+            sk = sum(1 for c in cells if c.get("status") == "skipped")
+            print(f"roofline_cells,0,ok={ok};skipped={sk};total={len(cells)}")
+        else:
+            print("roofline_cells,0,none (run repro.launch.run_dryruns)")
+    except Exception as e:  # pragma: no cover
+        print(f"roofline_cells,0,error={e}")
+
+
+if __name__ == "__main__":
+    main()

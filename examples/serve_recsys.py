@@ -1,0 +1,12 @@
+"""End-to-end serving driver: CTR scoring + Div-DPP slate diversification
+over batched requests (the paper's production scenario).
+
+  PYTHONPATH=src python examples/serve_recsys.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main([
+        "--arch", "deepfm", "--requests", "16", "--candidates", "2000",
+        "--slate", "10", "--shortlist", "200", "--alpha", "3.0",
+    ])

@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,31 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+serving scenario is exercised through the recsys archs' retrieval shape).
+
+``get_arch(id)`` / ``list_archs()`` are the ``--arch`` surface.
+"""
+from repro.configs.base import ArchSpec
+
+_MODULES = {
+    "arctic-480b": "repro.configs.arctic_480b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini_3p8b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "qwen1.5-4b": "repro.configs.qwen15_4b",
+    "graphcast": "repro.configs.graphcast",
+    "autoint": "repro.configs.autoint",
+    "xdeepfm": "repro.configs.xdeepfm",
+    "wide-deep": "repro.configs.wide_deep",
+    "deepfm": "repro.configs.deepfm",
+}
+
+
+def list_archs():
+    return sorted(_MODULES)
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    import importlib
+
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list_archs()}")
+    return importlib.import_module(_MODULES[arch_id]).ARCH

@@ -1,0 +1,60 @@
+"""The paper's primary contribution: fast greedy DPP MAP inference
+("Div-DPP", Chen et al. 2017/2018) plus the kernel construction, the
+naive-greedy oracle, the reference diversifiers and the evaluation
+metrics.  See DESIGN.md §1-§3.
+"""
+from repro.core.kernel_matrix import (
+    build_kernel_dense,
+    build_kernel_dense_raw,
+    map_relevance,
+    normalize_columns,
+    scaled_features,
+    scaled_features_raw,
+    similarity_from_features,
+)
+from repro.core.greedy_chol import (
+    GreedyResult,
+    dpp_greedy,
+    dpp_greedy_dense,
+    dpp_greedy_dense_batch,
+    dpp_greedy_lowrank,
+    dpp_greedy_lowrank_batch,
+)
+from repro.core.greedy_naive import greedy_map_naive
+from repro.core.baselines import (
+    greedy_avg_select,
+    mmr_select,
+    random_top_select,
+    top_n_select,
+)
+from repro.core.metrics import (
+    log_det_objective,
+    mean_slate_diversity,
+    recall_at_n,
+    slate_diversity,
+)
+
+__all__ = [
+    "GreedyResult",
+    "build_kernel_dense",
+    "build_kernel_dense_raw",
+    "map_relevance",
+    "normalize_columns",
+    "scaled_features",
+    "scaled_features_raw",
+    "similarity_from_features",
+    "dpp_greedy",
+    "dpp_greedy_dense",
+    "dpp_greedy_dense_batch",
+    "dpp_greedy_lowrank",
+    "dpp_greedy_lowrank_batch",
+    "greedy_map_naive",
+    "greedy_avg_select",
+    "mmr_select",
+    "random_top_select",
+    "top_n_select",
+    "log_det_objective",
+    "mean_slate_diversity",
+    "recall_at_n",
+    "slate_diversity",
+]

@@ -1,0 +1,103 @@
+"""Reference diversification algorithms the paper compares against (§5).
+
+* MMR   (Carbonell & Goldstein '98, paper eq. (25)):
+      j = argmax  theta*r_i + (1-theta) * min_{k in R} (1 - S_ki)
+* Greedy (Bradley & Smyth '01, paper eq. (26)):
+      j = argmax  theta*r_i + (1-theta) * mean_{k in R} (1 - S_ki)
+  (The paper's displayed eq. (26) shows ``max`` but the surrounding text
+  — "(26) uses the average dissimilarity" — and the cited [3] both say
+  *average*; we implement average and note the typo.)
+* Random/Top (paper §5): sample N uniformly from the N+b most relevant
+  (b=0 degenerates to pure Top-N).
+
+All selectors share the fixed-shape conventions of ``greedy_chol``:
+(M,) relevance, (M, M) similarity, optional (M,) selectable mask, output
+(N,) int32 indices (no early stop — these methods always fill N slots,
+as in the paper).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -jnp.inf
+
+
+def _select_loop(r, S, k, theta, mask, use_min: bool):
+    M = r.shape[0]
+    dtype = r.dtype
+    avail = jnp.where(mask, 0.0, NEG_INF).astype(dtype)
+
+    # State trackers for the dissimilarity aggregate over selected items.
+    min_dis = jnp.ones((M,), dtype)  # min over empty set := 1 (constant
+    sum_dis = jnp.zeros((M,), dtype)  # -> first pick is argmax relevance)
+    sel = jnp.full((k,), -1, jnp.int32)
+
+    def body(t, state):
+        min_dis, sum_dis, avail, sel = state
+        agg = min_dis if use_min else jnp.where(t == 0, 1.0, sum_dis / jnp.maximum(t, 1))
+        score = theta * r + (1.0 - theta) * agg + avail
+        j = jnp.argmax(score)
+        dis_j = 1.0 - S[j]  # dissimilarity of every item to the new pick
+        min_dis2 = jnp.minimum(min_dis, dis_j)
+        sum_dis2 = sum_dis + dis_j
+        avail = avail.at[j].set(NEG_INF)
+        sel = sel.at[t].set(j)
+        return min_dis2, sum_dis2, avail, sel
+
+    _, _, _, sel = jax.lax.fori_loop(0, k, body, (min_dis, sum_dis, avail, sel))
+    return sel
+
+
+@partial(jax.jit, static_argnames=("k",))
+def mmr_select(
+    r: jnp.ndarray,
+    S: jnp.ndarray,
+    k: int,
+    theta: float = 0.5,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """MMR (paper eq. (25)) — min-dissimilarity aggregate."""
+    if mask is None:
+        mask = jnp.ones(r.shape, bool)
+    return _select_loop(r, S, k, jnp.asarray(theta, r.dtype), mask, use_min=True)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def greedy_avg_select(
+    r: jnp.ndarray,
+    S: jnp.ndarray,
+    k: int,
+    theta: float = 0.5,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Greedy [3] (paper eq. (26)) — average-dissimilarity aggregate."""
+    if mask is None:
+        mask = jnp.ones(r.shape, bool)
+    return _select_loop(r, S, k, jnp.asarray(theta, r.dtype), mask, use_min=False)
+
+
+def top_n_select(r: np.ndarray, k: int, mask: Optional[np.ndarray] = None) -> np.ndarray:
+    """Pure relevance Top-N."""
+    r = np.asarray(r)
+    if mask is not None:
+        r = np.where(mask, r, -np.inf)
+    return np.argsort(-r, kind="stable")[:k]
+
+
+def random_top_select(
+    r: np.ndarray,
+    k: int,
+    b: int,
+    rng: np.random.Generator,
+    mask: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Random baseline (paper §5): N uniform picks from the N+b most relevant."""
+    pool = top_n_select(r, k + b, mask)
+    if b == 0:
+        return pool
+    return rng.choice(pool, size=min(k, pool.size), replace=False)

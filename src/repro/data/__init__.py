@@ -1,0 +1,16 @@
+from repro.data.synthetic import (
+    Graph,
+    batched_molecules,
+    lm_batches,
+    neighbor_sample,
+    pad_subgraph,
+    random_graph,
+    recsys_batches,
+)
+from repro.data.interactions import (
+    InteractionDataset,
+    candidates_and_relevance,
+    item_similarity,
+    load_preset,
+    synth_interactions,
+)

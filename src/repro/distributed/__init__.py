@@ -1,0 +1,9 @@
+from repro.distributed.context import (
+    axis_rules,
+    constrain,
+    current_mesh,
+    current_rules,
+    logical_to_spec,
+    multi_pod_rules,
+    single_pod_rules,
+)

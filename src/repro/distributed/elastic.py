@@ -1,0 +1,42 @@
+"""Elastic re-meshing: when hosts are lost (or added), rebuild the mesh
+from the surviving device count and reshard training state from the last
+checkpoint.
+
+The policy keeps the model axis fixed when possible (param shardings
+remain valid) and shrinks the data axis — DP degree is the elastic
+dimension, which is how production fleets handle node loss without
+invalidating the TP layout.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+
+
+def choose_mesh_shape(n_devices: int, model_pref: int) -> Tuple[int, int]:
+    """Largest (data, model) grid with model | model_pref, maximizing used
+    devices; prefers keeping the full model axis."""
+    for model in sorted(
+        {m for m in range(1, model_pref + 1) if model_pref % m == 0}, reverse=True
+    ):
+        data = n_devices // model
+        if data >= 1:
+            return data, model
+    return n_devices, 1
+
+
+def make_elastic_mesh(devices, model_pref: int):
+    """Mesh over an explicit device list (survivors)."""
+    n = len(devices)
+    data, model = choose_mesh_shape(n, model_pref)
+    used = np.asarray(devices[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(used, ("data", "model"))
+
+
+def reshard(tree, shardings):
+    """Move/reshard a pytree onto new shardings (device_put handles the
+    cross-mesh transfer; after a failure this is a restore-from-checkpoint
+    placement in practice)."""
+    return jax.device_put(tree, shardings)

@@ -1,0 +1,4 @@
+from repro.kernels.dpp_greedy.ops import dpp_greedy, vmem_bytes
+from repro.kernels.dpp_greedy.ref import dpp_greedy_ref
+
+__all__ = ["dpp_greedy", "dpp_greedy_ref", "vmem_bytes"]

@@ -1,0 +1,54 @@
+"""Jitted public wrapper for the dpp_greedy Pallas kernel.
+
+Handles TPU-friendly padding (M to a lane multiple, D to a sublane
+multiple) and falls back to the pure-jnp path when the VMEM working set
+would not fit (large M) or when the caller asks for it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dpp_greedy.dpp_greedy import dpp_greedy_kernel
+from repro.kernels.dpp_greedy.ref import dpp_greedy_ref
+
+LANE = 128
+SUBLANE = 8
+# V (D*M) + C (N*M) + a few (1, M) rows, all f32, must fit in ~16 MB VMEM.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def vmem_bytes(D: int, M: int, k: int) -> int:
+    Mp, Dp = _round_up(M, LANE), _round_up(D, SUBLANE)
+    return 4 * (Dp * Mp + _round_up(k, SUBLANE) * Mp + 8 * Mp)
+
+
+def dpp_greedy(
+    V: jnp.ndarray,
+    k: int,
+    mask: jnp.ndarray | None = None,
+    eps: float = 1e-3,
+    interpret: bool = True,
+    force_jnp: bool = False,
+):
+    """Batched greedy DPP MAP inference.
+
+    V (B, D, M) scaled features, mask (B, M). Returns (sel, d_hist) with
+    shape (B, k); sel slots after an eps-stop hold -1.
+    """
+    B, D, M = V.shape
+    if mask is None:
+        mask = jnp.ones((B, M), bool)
+    if force_jnp or vmem_bytes(D, M, k) > VMEM_BUDGET_BYTES:
+        return dpp_greedy_ref(V, mask, k, eps)
+
+    Mp, Dp = _round_up(M, LANE), _round_up(D, SUBLANE)
+    if (Mp, Dp) != (M, D):
+        V = jnp.pad(V, ((0, 0), (0, Dp - D), (0, Mp - M)))
+        mask = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, Mp - M)))
+    sel, dhist = dpp_greedy_kernel(V, mask, k=k, eps=eps, interpret=interpret)
+    return sel, dhist

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the dpp_greedy Pallas kernel.
+
+An independent implementation path: ``repro.core.greedy_chol`` keeps the
+Cholesky state as (M, N) columns (the paper's layout), while the kernel
+uses the transposed (N, M) row layout — agreement between the two is a
+meaningful check.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.greedy_chol import dpp_greedy_lowrank_batch
+
+
+def dpp_greedy_ref(V: jnp.ndarray, mask: jnp.ndarray, k: int, eps: float = 1e-3):
+    """V (B, D, M), mask (B, M) -> (sel (B, k) i32, d_hist (B, k) f32)."""
+    res = dpp_greedy_lowrank_batch(V.astype(jnp.float32), k, eps, mask.astype(bool))
+    return res.indices, res.d_hist

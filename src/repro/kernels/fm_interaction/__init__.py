@@ -1,0 +1,4 @@
+from repro.kernels.fm_interaction.ops import fm_interaction
+from repro.kernels.fm_interaction.ref import fm_interaction_ref
+
+__all__ = ["fm_interaction", "fm_interaction_ref"]

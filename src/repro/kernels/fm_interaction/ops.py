@@ -1,0 +1,25 @@
+"""Jitted wrapper: pads the batch to the block size, dispatches kernel/ref."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.fm_interaction.fm_interaction import fm_interaction_kernel
+from repro.kernels.fm_interaction.ref import fm_interaction_ref
+
+
+def fm_interaction(
+    emb: jnp.ndarray,
+    block_b: int = 128,
+    interpret: bool = True,
+    force_jnp: bool = False,
+) -> jnp.ndarray:
+    """emb (B, F, D) -> (B,) fused FM second-order term."""
+    if force_jnp:
+        return fm_interaction_ref(emb)
+    B = emb.shape[0]
+    bb = min(block_b, B)
+    pad = (-B) % bb
+    if pad:
+        emb = jnp.pad(emb, ((0, pad), (0, 0), (0, 0)))
+    out = fm_interaction_kernel(emb, block_b=bb, interpret=interpret)
+    return out[:B]

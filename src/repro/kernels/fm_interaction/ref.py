@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the FM interaction kernel."""
+import jax.numpy as jnp
+
+
+def fm_interaction_ref(emb: jnp.ndarray) -> jnp.ndarray:
+    """emb (B, F, D) -> (B,): 0.5 * sum_d[(sum_f v)^2 - sum_f v^2]."""
+    v = emb.astype(jnp.float32)
+    s = jnp.sum(v, axis=1)
+    sq = jnp.sum(v * v, axis=1)
+    return 0.5 * jnp.sum(s * s - sq, axis=1)

@@ -1,0 +1,4 @@
+from repro.kernels.scored_topk.ops import scored_topk
+from repro.kernels.scored_topk.ref import scored_topk_ref
+
+__all__ = ["scored_topk", "scored_topk_ref"]

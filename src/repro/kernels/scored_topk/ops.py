@@ -1,0 +1,28 @@
+"""Jitted wrapper: block-survivor kernel + final reduce; jnp fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.scored_topk.scored_topk import scored_topk_kernel
+from repro.kernels.scored_topk.ref import scored_topk_ref
+
+
+def scored_topk(
+    emb: jnp.ndarray,
+    query: jnp.ndarray,
+    c: int = 128,
+    block_m: int = 8192,
+    interpret: bool = True,
+    force_jnp: bool = False,
+):
+    """Global top-c of ``emb @ query``: (vals (c,), idx (c,))."""
+    M = emb.shape[0]
+    if force_jnp or M < 2 * min(block_m, M) or M % min(block_m, M) != 0:
+        return scored_topk_ref(emb, query, c)
+    bvals, bidx = scored_topk_kernel(
+        emb, query, c=c, block_m=block_m, interpret=interpret
+    )
+    flat_v, flat_i = bvals.reshape(-1), bidx.reshape(-1)
+    vals, pos = jax.lax.top_k(flat_v, c)
+    return vals, flat_i[pos]

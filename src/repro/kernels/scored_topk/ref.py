@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for scored_topk."""
+import jax
+import jax.numpy as jnp
+
+
+def scored_topk_ref(emb: jnp.ndarray, query: jnp.ndarray, c: int):
+    """emb (M, D), query (D,) -> (vals (c,), idx (c,)) global top-c."""
+    s = emb.astype(jnp.float32) @ query.astype(jnp.float32)
+    return jax.lax.top_k(s, c)

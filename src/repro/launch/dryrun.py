@@ -1,0 +1,185 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (device count locks on first init).
+#   This is the ONLY entry point that fakes devices; tests/benches see 1.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production mesh and record memory / cost / collective /
+roofline evidence.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b \
+      --shape train_4k --mesh pod          # 16x16 single pod
+  PYTHONPATH=src python -m repro.launch.dryrun --arch ... --mesh multipod
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+
+Results append to experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import numpy as np
+import json
+import time
+import traceback
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str, out_dir: str,
+             keep_hlo: bool = False, profile: str = "baseline") -> dict:
+    import jax
+
+    from repro.configs import get_arch
+    from repro.distributed.context import (
+        axis_rules, fsdp_ep_rules, multi_pod_rules, recsys_a2a_rules,
+        single_pod_rules,
+    )
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.roofline.analysis import analyze, roofline_fraction
+
+    arch = get_arch(arch_id)
+    if shape_name in arch.skips:
+        rec = {
+            "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+            "status": "skipped", "reason": arch.skips[shape_name],
+        }
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_name}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    shape = arch.shapes[shape_name]
+    multi = mesh_name == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    if profile in ("fsdp_ep", "fsdp_ep_remat"):
+        rules = fsdp_ep_rules(multi)
+    elif profile == "a2a_emb":
+        rules = recsys_a2a_rules(multi)
+    else:
+        rules = multi_pod_rules() if multi else single_pod_rules()
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    with axis_rules(rules, mesh):
+        cell = build_cell(arch, shape, mesh, rules, profile=profile)
+        jitted = jax.jit(
+            cell.step_fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+        )
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_stats = None
+    if mem is not None:
+        mem_stats = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+        }
+    # CompiledMemoryStats on the CPU backend under-reports sharded args;
+    # compute the static per-chip residency analytically from the actual
+    # in_shardings: sum over args of bytes(arg) / num_devices(sharding).
+    static_per_chip = 0.0
+    for arg, sh in zip(
+        jax.tree.leaves(cell.args),
+        jax.tree.leaves(cell.in_shardings,
+                        is_leaf=lambda x: hasattr(x, "num_devices")),
+    ):
+        n_shards = getattr(sh, "num_devices", chips)
+        # NamedSharding: shard count = product of mesh axes used in spec
+        try:
+            shard_shape = sh.shard_shape(arg.shape)
+            frac = 1.0
+            for a, b in zip(shard_shape, arg.shape):
+                frac *= a / max(b, 1)
+        except Exception:
+            frac = 1.0
+        static_per_chip += float(np.prod(arg.shape) if arg.shape else 1) \
+            * arg.dtype.itemsize * frac
+    if mem_stats is None:
+        mem_stats = {}
+    mem_stats["static_args_per_chip_bytes"] = int(static_per_chip)
+    mem_stats["fits_16gb_v5e_args"] = bool(static_per_chip < 16e9)
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    report = analyze(
+        arch=arch_id, shape=shape_name, mesh_name=mesh_name, chips=chips,
+        cost=cost, hlo_text=hlo, model_flops=cell.model_flops_per_step,
+        memory_stats=mem_stats, notes=cell.notes,
+    )
+    rec = report.to_dict()
+    rec.update({
+        "status": "ok",
+        "profile": profile,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "roofline_fraction": roofline_fraction(report),
+        "hlo_bytes_len": len(hlo),
+    })
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if profile == "baseline" else f"__{profile}"
+    path = os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if keep_hlo:
+        with open(path.replace(".json", ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=False)
+    ap.add_argument("--shape", required=False)
+    ap.add_argument("--mesh", choices=["pod", "multipod"], default="pod")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "fsdp_ep", "fsdp_ep_remat",
+                             "flash_remat", "a2a_emb"])
+    args = ap.parse_args()
+
+    if args.list:
+        from repro.configs import get_arch, list_archs
+
+        for a in list_archs():
+            spec = get_arch(a)
+            for s in spec.shapes:
+                mark = " [SKIP: " + spec.skips[s] + "]" if s in spec.skips else ""
+                print(f"{a:18s} {s}{mark}")
+        return
+
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, args.out,
+                       args.keep_hlo, args.profile)
+    except Exception:
+        traceback.print_exc()
+        rec = {
+            "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+            "profile": args.profile,
+            "status": "error", "error": traceback.format_exc()[-2000:],
+        }
+        os.makedirs(args.out, exist_ok=True)
+        sfx = "" if args.profile == "baseline" else f"__{args.profile}"
+        path = os.path.join(args.out, f"{args.arch}__{args.shape}__{args.mesh}{sfx}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        raise SystemExit(1)
+
+    if rec.get("status") == "ok":
+        print(json.dumps({k: rec[k] for k in (
+            "arch", "shape", "mesh", "chips", "t_compute", "t_memory",
+            "t_collective", "bottleneck", "roofline_fraction", "compile_s",
+        )}, indent=1))
+        if rec.get("memory_stats"):
+            print("memory_analysis:", rec["memory_stats"])
+        print("cost_analysis flops (per-chip):", rec["hlo_flops_global"] / rec["chips"])
+    else:
+        print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Driver: run every (arch x shape x mesh) dry-run cell in a subprocess
+(fresh jax per cell; incremental — completed cells are skipped).
+
+  PYTHONPATH=src python -m repro.launch.run_dryruns [--mesh pod multipod]
+      [--only arch1,arch2] [--timeout 3600] [--force]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def cell_done(out_dir: str, arch: str, shape: str, mesh: str) -> bool:
+    p = os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.isfile(p):
+        return False
+    try:
+        with open(p) as f:
+            return json.load(f).get("status") in ("ok", "skipped")
+    except json.JSONDecodeError:
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", nargs="+", default=["pod", "multipod"])
+    ap.add_argument("--only", default="")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import get_arch, list_archs
+
+    archs = args.only.split(",") if args.only else list_archs()
+    cells = []
+    for a in archs:
+        spec = get_arch(a)
+        for s in spec.shapes:
+            for m in args.mesh:
+                cells.append((a, s, m))
+
+    print(f"{len(cells)} cells")
+    failures = []
+    for i, (a, s, m) in enumerate(cells):
+        if not args.force and cell_done(args.out, a, s, m):
+            print(f"[{i+1}/{len(cells)}] {a} {s} {m}: cached")
+            continue
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", a, "--shape", s, "--mesh", m, "--out", args.out]
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env=dict(os.environ, PYTHONPATH="src"))
+            ok = r.returncode == 0
+        except subprocess.TimeoutExpired:
+            ok = False
+            with open(os.path.join(args.out, f"{a}__{s}__{m}.json"), "w") as f:
+                json.dump({"arch": a, "shape": s, "mesh": m,
+                           "status": "timeout", "timeout_s": args.timeout}, f)
+        dt = time.time() - t0
+        status = "OK" if ok else "FAIL"
+        if not ok:
+            failures.append((a, s, m))
+        print(f"[{i+1}/{len(cells)}] {a} {s} {m}: {status} ({dt:.0f}s)")
+        if not ok and 'r' in dir():
+            tail = (r.stderr or "")[-800:]
+            print("  stderr tail:", tail.replace("\n", "\n  "))
+    print(f"done; {len(failures)} failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Parameter / input PartitionSpec rule tables per model family.
+
+Rules map param-tree paths to logical sharding:
+  * LM: 2D megatron TP on "model" x ZeRO-3 FSDP on the data axes
+    (column-parallel wq/wk/wv/wi/wg, row-parallel wo; embeddings
+    vocab-sharded; MoE experts on "model", FSDP inside each expert);
+  * recsys: embedding tables row-sharded on "model", towers replicated;
+  * GNN: params replicated (small), node/edge arrays sharded over the
+    whole device grid.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _res(rules: Mapping, name: str):
+    v = rules.get(name)
+    if v is None:
+        return None
+    return tuple(v) if isinstance(v, (list, tuple)) else v
+
+
+def lm_param_spec(path, leaf, rules, profile: str = "baseline") -> P:
+    name = _path_str(path)
+    F = _res(rules, "fsdp")
+    M = _res(rules, "model")
+    stacked = name.startswith("layers/")
+    pre = (None,) if stacked else ()
+
+    def spec(*axes):
+        return P(*(pre + axes))
+
+    if profile.startswith("fsdp_ep"):
+        # no TP: every dense 2D weight ZeRO-3-sharded on d_in over ALL
+        # axes; experts keep EP on "model" with FSDP inside each expert.
+        Fe = _res(rules, "fsdp_expert")
+        dp = _res(rules, "batch")
+        if name == "embed":
+            return P(M, dp)
+        if name == "unembed":
+            return P(dp, M)
+        if "moe/router" in name:
+            return spec(None, None)
+        if name.endswith(("moe/wi", "moe/wg")):
+            return spec(M, Fe, None)
+        if name.endswith("moe/wo"):
+            return spec(M, None, Fe)
+        if name.endswith("/w") and len(leaf.shape) == len(pre) + 2:
+            return spec(F, None)
+        return P(*(pre + (None,) * (len(leaf.shape) - len(pre))))
+
+    if name == "embed":
+        return P(M, F)
+    if name == "unembed":
+        return P(F, M)
+    if name.endswith(("wq/w", "wk/w", "wv/w")):
+        return spec(F, M)
+    if name.endswith(("wq/b", "wk/b", "wv/b")):
+        return spec(M)
+    if "attn/wo/w" in name:
+        return spec(M, F)
+    if name.endswith(("mlp/wi/w", "mlp/wg/w")):
+        return spec(F, M)
+    if name.endswith("mlp/wo/w"):
+        return spec(M, F)
+    if "moe/router" in name:
+        return spec(None, None)
+    if name.endswith(("moe/wi", "moe/wg")):
+        return spec(M, F, None)
+    if name.endswith("moe/wo"):
+        return spec(M, None, F)
+    # norms, biases, scalars
+    return P(*(pre + (None,) * (len(leaf.shape) - len(pre))))
+
+
+def recsys_param_spec(path, leaf, rules) -> P:
+    name = _path_str(path)
+    M = _res(rules, "rows")
+    if name in ("table", "wide"):
+        return P(M, None)
+    return P(*(None,) * len(leaf.shape))
+
+
+def gnn_param_spec(path, leaf, rules) -> P:
+    return P(*(None,) * len(leaf.shape))
+
+
+def _fix_spec(spec: P, shape, mesh) -> P:
+    """Drop trailing mesh axes from any dim whose size they don't divide
+    (e.g. d_ff=6912 over a 512-way FSDP axis group -> keep the largest
+    divisible prefix)."""
+    fixed = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            fixed.append(entry)
+            continue
+        axes = list(entry) if isinstance(entry, (list, tuple)) else [entry]
+        while axes:
+            prod = int(np.prod([mesh.shape[a] for a in axes]))
+            if shape[i] % prod == 0 and shape[i] >= prod:
+                break
+            axes.pop()
+        fixed.append(tuple(axes) if len(axes) != 1 else axes[0])
+        if not axes:
+            fixed[-1] = None
+    return P(*fixed)
+
+
+def param_shardings(family: str, tree, mesh, rules, profile: str = "baseline"):
+    if family == "lm":
+        fn = lambda p, l: lm_param_spec(p, l, rules, profile)
+    elif family == "recsys":
+        fn = lambda p, l: recsys_param_spec(p, l, rules)
+    else:
+        fn = lambda p, l: gnn_param_spec(p, l, rules)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, _fix_spec(fn(p, l), l.shape, mesh)), tree
+    )
+
+
+def opt_shardings(param_sh, mesh):
+    """AdamW state: moments shard like params; step is replicated."""
+    return {
+        "m": param_sh,
+        "v": param_sh,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_axes_for(rules, n: int, mesh) -> tuple:
+    """Data axes if the leading dim divides evenly, else replicate."""
+    v = _res(rules, "batch") or ()
+    axes = (v,) if isinstance(v, str) else tuple(v)
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return axes if axes and n % size == 0 and n >= size else ()

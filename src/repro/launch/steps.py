@@ -1,0 +1,310 @@
+"""Cell builders: (architecture x input shape x mesh) -> a lowered-ready
+step function with fully-specified in/out shardings and ShapeDtypeStruct
+inputs (the shannon/kernels dry-run pattern: weak-type-correct, shardable,
+zero allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec
+from repro.configs.shapes import ShapeSpec
+from repro.launch.shardings import (
+    batch_axes_for,
+    opt_shardings,
+    param_shardings,
+    _res,
+)
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as tfm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.serving.reranker import DPPRerankConfig, rerank
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    step_fn: Callable
+    args: Tuple[Any, ...]  # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    notes: str = ""
+    model_flops_per_step: float = 0.0  # 6*N*D (train) / 2*N*D (serve) etc.
+
+
+def _struct(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _scalar(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _train_wrapper(loss_fn, acfg: AdamWConfig):
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt, metrics = adamw_update(params, grads, opt, acfg)
+        return params, opt, {"loss": loss, **metrics}
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_cell(arch: ArchSpec, shape: ShapeSpec, mesh, rules, acfg: AdamWConfig, profile: str = "baseline") -> Cell:
+    cfg: tfm.TransformerConfig = arch.config
+    B, S = shape.global_batch, shape.seq_len
+    p_struct = jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = param_shardings("lm", p_struct, mesh, rules, profile)
+    b_axes = batch_axes_for(rules, B, mesh)
+    M = _res(rules, "model")
+    kv_seq = _res(rules, "kv_seq")
+    seq_ax = _res(rules, "seq")  # fsdp_ep: sequence sharded on "model"
+
+    def cache_shardings(cache_struct):
+        def one(path, leaf):
+            name = "/".join(str(getattr(k, "key", k)) for k in path)
+            if name.endswith("pos"):
+                return _scalar(mesh)
+            # (n_layers_in_group, B, W, KV, dh): seq on model, batch on dp
+            return NamedSharding(mesh, P(None, b_axes or None, kv_seq, None, None))
+
+        return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+    if shape.kind == "train":
+        loss_fn = lambda p, b: tfm.train_loss(p, b, cfg)
+        step = _train_wrapper(loss_fn, acfg)
+        o_struct = jax.eval_shape(lambda: adamw_init(p_struct))
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        b_sh = {"tokens": NamedSharding(mesh, P(b_axes or None, seq_ax))}
+        o_sh = opt_shardings(p_sh, mesh)
+        m_sh = {"loss": _scalar(mesh), "grad_norm": _scalar(mesh)}
+        flops = 6.0 * cfg.active_param_count() * B * S
+        return Cell(arch.id, shape.name, step, (p_struct, o_struct, batch),
+                    (p_sh, o_sh, b_sh), (p_sh, o_sh, m_sh),
+                    model_flops_per_step=flops)
+
+    if shape.kind == "prefill":
+        def step(params, batch):
+            return tfm.prefill(params, batch["tokens"], cfg, max_seq=S)
+
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        b_sh = {"tokens": NamedSharding(mesh, P(b_axes or None, None))}
+        c_struct = jax.eval_shape(lambda: tfm.init_cache(cfg, B, S))
+        logits_sh = NamedSharding(mesh, P(b_axes or None, M))
+        flops = 2.0 * cfg.active_param_count() * B * S
+        return Cell(arch.id, shape.name, step, (p_struct, batch),
+                    (p_sh, b_sh), (logits_sh, cache_shardings(c_struct)),
+                    model_flops_per_step=flops)
+
+    # decode (decode_32k / long_500k)
+    c_struct = jax.eval_shape(lambda: tfm.init_cache(cfg, B, S))
+    c_sh = cache_shardings(c_struct)
+
+    def step(params, cache, batch):
+        return tfm.decode_step(params, cache, batch["tokens"], cfg)
+
+    batch = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    b_sh = {"tokens": NamedSharding(mesh, P(b_axes or None, None))}
+    logits_sh = NamedSharding(mesh, P(b_axes or None, M))
+    flops = 2.0 * cfg.active_param_count() * B
+    return Cell(arch.id, shape.name, step, (p_struct, c_struct, batch),
+                (p_sh, c_sh, b_sh), (logits_sh, c_sh),
+                model_flops_per_step=flops)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _gnn_dims(shape: ShapeSpec) -> Tuple[int, int, str]:
+    if shape.name == "minibatch_lg":
+        b, (f1, f2) = shape.batch_nodes, shape.fanout
+        n = b * (1 + f1 + f1 * f2)
+        e = b * f1 + b * f1 * f2
+        note = f"sampled subgraph: {b} seeds, fanout {shape.fanout}, padded"
+    elif shape.name == "molecule":
+        n = shape.n_graphs * shape.nodes_per_graph
+        e = shape.n_graphs * shape.edges_per_graph
+        note = f"{shape.n_graphs} disjoint molecules"
+    else:
+        n, e = shape.n_nodes, shape.n_edges
+        note = "full graph"
+    return _round_up(n, 512), _round_up(e, 512), note + " (padded to /512)"
+
+
+def _gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh, rules, acfg: AdamWConfig, profile: str = "baseline") -> Cell:
+    cfg0: gnn_mod.GNNConfig = arch.config
+    cfg = dataclasses.replace(cfg0, d_feat=shape.d_feat)
+    N, E, note = _gnn_dims(shape)
+    p_struct = jax.eval_shape(lambda: gnn_mod.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = param_shardings("gnn", p_struct, mesh, rules)
+    o_struct = jax.eval_shape(lambda: adamw_init(p_struct))
+    o_sh = opt_shardings(p_sh, mesh)
+
+    nodes_ax = _res(rules, "nodes")
+    edges_ax = _res(rules, "edges")
+    batch = {
+        "node_feats": jax.ShapeDtypeStruct((N, cfg.d_feat), jnp.float32),
+        "edges": jax.ShapeDtypeStruct((E, 2), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((N, cfg.n_vars), jnp.float32),
+        "node_mask": jax.ShapeDtypeStruct((N,), jnp.bool_),
+        "edge_mask": jax.ShapeDtypeStruct((E,), jnp.bool_),
+    }
+    b_sh = {
+        "node_feats": NamedSharding(mesh, P(nodes_ax, None)),
+        "edges": NamedSharding(mesh, P(edges_ax, None)),
+        "targets": NamedSharding(mesh, P(nodes_ax, None)),
+        "node_mask": NamedSharding(mesh, P(nodes_ax)),
+        "edge_mask": NamedSharding(mesh, P(edges_ax)),
+    }
+    loss_fn = lambda p, b: gnn_mod.mse_loss(p, b, cfg)
+    step = _train_wrapper(loss_fn, acfg)
+    m_sh = {"loss": _scalar(mesh), "grad_norm": _scalar(mesh)}
+    # processor: per edge ~2*(2h+de)*h MLP flops x2 (fwd+... ) -> use 6x fwd
+    fwd = cfg.n_layers * (
+        E * 2 * (2 * cfg.d_hidden + cfg.d_edge) * cfg.d_hidden
+        + N * 2 * (cfg.d_hidden + cfg.d_edge) * cfg.d_hidden
+    )
+    return Cell(arch.id, shape.name, step, (p_struct, o_struct, batch),
+                (p_sh, o_sh, b_sh), (p_sh, o_sh, m_sh), notes=note,
+                model_flops_per_step=3.0 * fwd)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh, rules, acfg: AdamWConfig, profile: str = "baseline") -> Cell:
+    cfg: recsys_mod.RecsysConfig = arch.config
+    F, H = cfg.n_fields, cfg.hot_size
+    p_struct = jax.eval_shape(lambda: recsys_mod.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = param_shardings("recsys", p_struct, mesh, rules)
+    # dense-tower flops per example (fwd), dominated by the MLP
+    d_in = F * cfg.embed_dim
+    dims = (d_in,) + tuple(cfg.mlp_dims) + (1,)
+    mlp_flops = sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+
+    if shape.kind == "train":
+        B = shape.batch
+        b_axes = batch_axes_for(rules, B, mesh)
+        o_struct = jax.eval_shape(lambda: adamw_init(p_struct))
+        batch = {
+            "ids": jax.ShapeDtypeStruct((B, F, H), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B,), jnp.float32),
+        }
+        b_sh = {
+            "ids": NamedSharding(mesh, P(b_axes or None, None, None)),
+            "labels": NamedSharding(mesh, P(b_axes or None)),
+        }
+        loss_fn = lambda p, b: recsys_mod.bce_loss(p, b, cfg)
+        step = _train_wrapper(loss_fn, acfg)
+        m_sh = {"loss": _scalar(mesh), "grad_norm": _scalar(mesh)}
+        return Cell(arch.id, shape.name, step, (p_struct, o_struct, batch),
+                    (p_sh, opt_shardings(p_sh, mesh), b_sh),
+                    (p_sh, opt_shardings(p_sh, mesh), m_sh),
+                    model_flops_per_step=3.0 * B * mlp_flops)
+
+    if shape.kind == "serve":
+        B = shape.batch
+        b_axes = batch_axes_for(rules, B, mesh)
+
+        def step(params, batch):
+            return recsys_mod.serve_scores(params, batch["ids"], cfg)
+
+        batch = {"ids": jax.ShapeDtypeStruct((B, F, H), jnp.int32)}
+        b_sh = {"ids": NamedSharding(mesh, P(b_axes or None, None, None))}
+        out_sh = NamedSharding(mesh, P(b_axes or None))
+        return Cell(arch.id, shape.name, step, (p_struct, batch),
+                    (p_sh, b_sh), out_sh,
+                    model_flops_per_step=1.0 * B * mlp_flops)
+
+    # retrieval_cand: score 1M candidates for one user, then Div-DPP rerank
+    # — the paper's serving scenario, inside the lowered graph.
+    Mc = shape.n_candidates
+    Mc_p = _round_up(Mc, 512)  # pad so the candidate axis shards evenly
+    b_axes = batch_axes_for(rules, Mc_p, mesh)
+    rr = DPPRerankConfig(slate_size=50, shortlist=1000, alpha=4.0)
+
+    def step(params, batch):
+        user = batch["user_ids"]  # (1, F, H)
+        cand = batch["cand_ids"]  # (Mc_p,) — pipeline pads to /512
+        pad_mask = jnp.arange(Mc_p) < Mc
+        ids = jnp.broadcast_to(user, (Mc_p, F, H)).astype(jnp.int32)
+        ids = jnp.concatenate(
+            [
+                ids[:, : cfg.item_field],
+                jnp.concatenate(
+                    [cand[:, None], jnp.full((Mc_p, H - 1), -1, jnp.int32)], axis=1
+                )[:, None] if H > 1 else cand[:, None, None],
+                ids[:, cfg.item_field + 1 :],
+            ],
+            axis=1,
+        )
+        from repro.distributed.context import constrain
+
+        ids = constrain(ids, "batch", None, None)
+        scores = recsys_mod.serve_scores(params, ids, cfg)
+        scores = jnp.where(pad_mask, scores, -jnp.inf)  # padding never wins
+        feats = recsys_mod.item_embeddings(params, cand, cfg)
+        slate, dh = rerank(scores, feats, rr)
+        return slate, dh
+
+    batch = {
+        "user_ids": jax.ShapeDtypeStruct((1, F, H), jnp.int32),
+        # candidate list padded to /512 by the input pipeline (scores for
+        # padding are masked to -inf before the shortlist top-k)
+        "cand_ids": jax.ShapeDtypeStruct((Mc_p,), jnp.int32),
+    }
+    b_sh = {
+        "user_ids": NamedSharding(mesh, P(None, None, None)),
+        "cand_ids": NamedSharding(mesh, P(b_axes or None)),
+    }
+    out_sh = (NamedSharding(mesh, P(None)), NamedSharding(mesh, P(None)))
+    return Cell(arch.id, shape.name, step, (p_struct, batch),
+                (p_sh, b_sh), out_sh,
+                notes=f"DPP rerank: shortlist={rr.shortlist} N={rr.slate_size} "
+                      f"alpha={rr.alpha} (paper Algorithm 1 in-graph)",
+                model_flops_per_step=1.0 * Mc * mlp_flops)
+
+
+def build_cell(
+    arch: ArchSpec, shape: ShapeSpec, mesh, rules,
+    acfg: Optional[AdamWConfig] = None,
+    profile: str = "baseline",
+) -> Cell:
+    acfg = acfg or AdamWConfig()
+    if profile != "baseline" and arch.family == "lm":
+        if profile == "flash_remat":
+            arch = dataclasses.replace(
+                arch, config=dataclasses.replace(arch.config, remat_chunks=True))
+        elif profile in ("fsdp_ep", "fsdp_ep_remat"):
+            cfgx = arch.config
+            if profile == "fsdp_ep_remat":
+                cfgx = dataclasses.replace(cfgx, remat_chunks=True)
+            arch = dataclasses.replace(arch, config=cfgx)
+    if profile == "a2a_emb" and arch.family == "recsys":
+        arch = dataclasses.replace(
+            arch, config=dataclasses.replace(arch.config, emb_mode="alltoall"))
+    fn = {"lm": _lm_cell, "gnn": _gnn_cell, "recsys": _recsys_cell}[arch.family]
+    cell = fn(arch, shape, mesh, rules, acfg, profile)
+    return cell

@@ -1,0 +1,160 @@
+"""Fault-tolerant training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepfm --reduced \
+      --steps 200 --batch 256 --ckpt-dir /tmp/ckpt --resume auto \
+      --ckpt-every 50 [--fail-at-step 120] [--grad-compression int8_ef]
+
+Features exercised end-to-end on CPU (and unchanged at scale):
+  * auto-resume from the latest committed checkpoint;
+  * failure injection (--fail-at-step raises mid-run; rerunning with
+    --resume auto continues from the last commit — the restart test);
+  * async atomic checkpointing every K steps;
+  * int8 error-feedback gradient compression (optional);
+  * straggler/heartbeat policies wired to (simulated) host reports;
+  * cosine LR schedule, grad clipping, loss/throughput logging.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer, latest_step, restore_checkpoint
+from repro.configs import get_arch
+from repro.data import lm_batches, random_graph, recsys_batches
+from repro.distributed.fault_tolerance import HeartbeatMonitor, StragglerPolicy
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as tfm
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_warmup,
+    ef_compress_grads,
+    ef_init,
+)
+
+
+def build_family(arch_id: str, reduced: bool, batch: int, seq: int):
+    spec = get_arch(arch_id)
+    cfg = spec.reduced() if reduced else spec.config
+    if spec.family == "lm":
+        loss_fn = lambda p, b: tfm.train_loss(p, b, cfg)
+        init_fn = lambda rng: tfm.init_params(rng, cfg)
+        data = lm_batches(cfg.vocab, batch, seq, seed=0)
+    elif spec.family == "recsys":
+        loss_fn = lambda p, b: recsys_mod.bce_loss(p, b, cfg)
+        init_fn = lambda rng: recsys_mod.init_params(rng, cfg)
+        data = recsys_batches(cfg.vocab_sizes, batch, seed=0)
+    else:
+        g = random_graph(512, 2048, cfg.d_feat, cfg.n_vars, seed=0)
+        const = {
+            "node_feats": jnp.asarray(g.node_feats),
+            "edges": jnp.asarray(g.edges),
+            "targets": jnp.asarray(g.targets),
+        }
+        loss_fn = lambda p, b: gnn_mod.mse_loss(p, b, cfg)
+        init_fn = lambda rng: gnn_mod.init_params(rng, cfg)
+
+        def graph_gen():
+            while True:
+                yield const
+
+        data = graph_gen()
+    return spec, cfg, loss_fn, init_fn, data
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", choices=["auto", "none"], default="none")
+    ap.add_argument("--fail-at-step", type=int, default=-1)
+    ap.add_argument("--grad-compression", choices=["none", "int8_ef"], default="none")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args(argv)
+
+    spec, cfg, loss_fn, init_fn, data = build_family(
+        args.arch, args.reduced, args.batch, args.seq
+    )
+    acfg = AdamWConfig(lr=args.lr)
+    params = init_fn(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    ef = ef_init(params) if args.grad_compression == "int8_ef" else None
+    start = 0
+
+    if args.resume == "auto" and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        start, state = restore_checkpoint(
+            args.ckpt_dir, {"params": params, "opt": opt}
+        )
+        params, opt = state["params"], state["opt"]
+        print(f"resumed from step {start}")
+
+    use_compression = args.grad_compression == "int8_ef"
+
+    @jax.jit
+    def step_fn(params, opt, ef_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if use_compression:
+            grads, ef_state = ef_compress_grads(grads, ef_state)
+        lr_scale = cosine_warmup(opt["step"], warmup=args.warmup, total=args.steps)
+        params, opt, metrics = adamw_update(params, grads, opt, acfg, lr_scale)
+        return params, opt, ef_state, {"loss": loss, **metrics}
+
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    hb = HeartbeatMonitor(n_hosts=jax.process_count(), timeout=300.0)
+    straggle = StragglerPolicy()
+    losses = []
+    t_start = time.time()
+    for s in range(start, args.steps):
+        if s == args.fail_at_step:
+            if ck:
+                ck.wait()
+            raise RuntimeError(f"injected failure at step {s} (restart test)")
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        t0 = time.time()
+        params, opt, ef, metrics = step_fn(params, opt, ef, batch)
+        dt = time.time() - t0
+        hb.beat(jax.process_index())
+        straggle.report(jax.process_index(), dt)
+        losses.append(float(metrics["loss"]))
+        if (s + 1) % args.log_every == 0:
+            print(f"step {s+1}: loss={losses[-1]:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+        if ck and (s + 1) % args.ckpt_every == 0:
+            ck.save_async(s + 1, {"params": params, "opt": opt})
+    if ck:
+        ck.save_async(args.steps, {"params": params, "opt": opt})
+        ck.wait()
+    wall = time.time() - t_start
+    summary = {
+        "arch": args.arch,
+        "steps_run": args.steps - start,
+        "first_loss": losses[0] if losses else None,
+        "last_loss": losses[-1] if losses else None,
+        "wall_s": round(wall, 2),
+        "stragglers": straggle.stragglers(),
+        "dead_hosts": hb.dead_hosts(),
+    }
+    print(json.dumps(summary))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump({"losses": losses, **summary}, f)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

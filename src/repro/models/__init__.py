@@ -1,0 +1,2 @@
+"""Model zoo: LM transformers (dense/MoE/hybrid), GraphCast-style GNN,
+CTR/ranking recsys models over a sharded EmbeddingBag."""

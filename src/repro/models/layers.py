@@ -1,0 +1,222 @@
+"""Shared neural-net layers (raw JAX; params are plain pytrees).
+
+Conventions:
+* ``init_*`` return param dicts; ``*_apply`` are pure functions;
+* compute dtype is the input dtype (bf16 in production), norm/softmax
+  accumulate in f32;
+* activations are sharding-constrained by *logical* names via
+  ``repro.distributed.context.constrain`` (no-op outside a mesh).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype, bias: bool = False, scale=None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": jax.random.normal(rng, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float, dtype=jnp.float32):
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x (..., S, H, d_head), positions (..., S) -> rotated x."""
+    d_head = x.shape[-1]
+    half = d_head // 2
+    freqs = rope_freqs(d_head, theta)  # (half,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal, optional sliding window) — chunked online-softmax
+# so the (S, S) score matrix is never materialized (flash-style in jnp).
+# ---------------------------------------------------------------------------
+
+
+def attention_init(rng, d_model, n_heads, n_kv_heads, d_head, dtype, qkv_bias=False):
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head, dtype, qkv_bias),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * d_head, dtype, qkv_bias),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * d_head, dtype, qkv_bias),
+        "wo": dense_init(ks[3], n_heads * d_head, d_model, dtype),
+    }
+
+
+def _chunk_attn(q, k, v, q_pos, kv_pos, window: Optional[int]):
+    """One query chunk vs full K/V with online mask.
+
+    q (B, Sq, KV, G, dh); k/v (B, Skv, KV, dh); positions int32.
+    Returns (B, Sq, KV, G, dh) f32 un-normalized? -> normalized output.
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "bqkgd,btkd->bkgqt", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = kv_pos[None, :] <= q_pos[:, None]  # causal (Sq, Skv)
+    if window is not None:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p / jnp.maximum(l, 1e-30), v.astype(jnp.float32))
+    return o
+
+
+def gqa_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+    q_offset: int | jnp.ndarray = 0,
+    chunk_q: int = 512,
+    remat_chunks: bool = False,
+):
+    """Causal GQA attention, chunked over queries.
+
+    q (B, Sq, H, dh); k, v (B, Skv, KV, dh).  ``q_offset`` is the absolute
+    position of q[0] (for decode/prefill-continuation).  Returns
+    (B, Sq, H, dh) in q.dtype.
+    """
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dh)
+    kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+
+    if Sq <= chunk_q:
+        q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+        o = _chunk_attn(qg, k, v, q_pos, kv_pos, window)
+        return o.reshape(B, Sq, H, dh).astype(q.dtype)
+
+    pad = (-Sq) % chunk_q
+    if pad:  # ragged tail: pad queries (outputs sliced off below)
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    Sq_p = Sq + pad
+    n_chunks = Sq_p // chunk_q
+    qg = qg.reshape(B, n_chunks, chunk_q, KV, G, dh)
+
+    def one(carry, qc_i):
+        qc, i = qc_i
+        q_pos = q_offset + i * chunk_q + jnp.arange(chunk_q, dtype=jnp.int32)
+        o = _chunk_attn(qc, k, v, q_pos, kv_pos, window)
+        return carry, o
+
+    if remat_chunks:
+        # flash-attention-style: recompute per-chunk scores/probs in the
+        # backward pass instead of stacking (n_chunks, ...) f32 residuals
+        one = jax.checkpoint(one)
+
+    _, o = jax.lax.scan(
+        one,
+        None,
+        (jnp.moveaxis(qg, 1, 0), jnp.arange(n_chunks, dtype=jnp.int32)),
+    )
+    o = jnp.moveaxis(o, 0, 1).reshape(B, Sq_p, H, dh)[:, :Sq]
+    return o.astype(q.dtype)
+
+
+def attention_apply(
+    p,
+    x: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    rope_theta: float,
+    window: Optional[int] = None,
+    chunk_q: int = 512,
+):
+    """Self-attention over x (B, S, d_model) with RoPE; returns (B, S, d)."""
+    B, S, _ = x.shape
+    q = dense(p["wq"], x).reshape(B, S, n_heads, d_head)
+    k = dense(p["wk"], x).reshape(B, S, n_kv_heads, d_head)
+    v = dense(p["wv"], x).reshape(B, S, n_kv_heads, d_head)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    o = gqa_attention(q, k, v, window=window, chunk_q=chunk_q)
+    return dense(p["wo"], o.reshape(B, S, n_heads * d_head))
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff, dtype),
+        "wg": dense_init(ks[1], d_model, d_ff, dtype),
+        "wo": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p, x):
+    h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x)
+    h = constrain(h, "batch", None, "ff")
+    return dense(p["wo"], h)
+
+
+def mlp_head_init(rng, dims: list[int], dtype, out_dim: int = 1):
+    """Plain ReLU MLP tower (recsys / GNN decoders)."""
+    ks = jax.random.split(rng, len(dims) + 1)
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        layers.append(dense_init(ks[i], a, b, dtype, bias=True))
+    layers.append(dense_init(ks[-1], dims[-1], out_dim, dtype, bias=True))
+    return {"layers": layers}
+
+
+def mlp_head_apply(p, x, final_activation=None):
+    h = x
+    for layer in p["layers"][:-1]:
+        h = jax.nn.relu(dense(layer, h))
+    out = dense(p["layers"][-1], h)
+    if final_activation is not None:
+        out = final_activation(out)
+    return out

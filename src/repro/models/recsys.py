@@ -1,0 +1,191 @@
+"""CTR / ranking model family: DeepFM, xDeepFM, Wide&Deep, AutoInt.
+
+All four share the fused row-sharded EmbeddingBag (embedding.py); they
+differ in the feature-interaction stage:
+
+  deepfm    — FM second-order (the fm_interaction Pallas kernel's math)
+              + first-order wide term + deep MLP            [1703.04247]
+  xdeepfm   — CIN (compressed interaction network) + MLP    [1803.05170]
+  wide-deep — linear wide term + deep MLP                   [1606.07792]
+  autoint   — multi-head self-attention over field embeddings
+              with residual projections                     [1810.11921]
+
+Serving entry points produce (score, item_embedding) pairs so the DPP
+re-ranker (repro.core / repro.serving) can diversify slates — the
+paper's serving integration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models import layers as L
+from repro.models.embedding import EmbeddingSpec, embedding_bag, init_table
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    vocab_sizes: Tuple[int, ...]  # one entry per sparse field
+    embed_dim: int
+    interaction: str  # fm | cin | concat | self-attn
+    mlp_dims: Tuple[int, ...] = ()
+    cin_layers: Tuple[int, ...] = ()
+    attn_layers: int = 0
+    attn_heads: int = 0
+    d_attn: int = 0
+    hot_size: int = 1  # ids per field (multi-hot bags supported)
+    item_field: int = 0  # which field is the "item" (retrieval / DPP rerank)
+    emb_mode: str = "psum"  # psum (baseline) | alltoall (§Perf profile)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def spec(self) -> EmbeddingSpec:
+        return EmbeddingSpec(self.vocab_sizes, self.embed_dim)
+
+    def param_count(self) -> int:
+        total = self.spec.total_rows * self.embed_dim
+        total += self.spec.total_rows  # wide/first-order table
+        d_in = self.n_fields * self.embed_dim
+        dims = (d_in,) + tuple(self.mlp_dims)
+        for a, b in zip(dims[:-1], dims[1:]):
+            total += a * b + b
+        return total
+
+
+def init_params(rng, cfg: RecsysConfig):
+    ks = jax.random.split(rng, 8)
+    spec = cfg.spec
+    p = {
+        "table": init_table(ks[0], spec, cfg.dtype),
+        "wide": init_table(ks[1], EmbeddingSpec(cfg.vocab_sizes, 1), cfg.dtype),
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+    d_in = cfg.n_fields * cfg.embed_dim
+    if cfg.mlp_dims:
+        p["mlp"] = L.mlp_head_init(ks[2], [d_in] + list(cfg.mlp_dims), cfg.dtype)
+    if cfg.interaction == "cin":
+        sizes = (cfg.n_fields,) + tuple(cfg.cin_layers)
+        keys = jax.random.split(ks[3], len(cfg.cin_layers))
+        p["cin"] = [
+            jax.random.normal(keys[i], (sizes[i + 1], sizes[i], cfg.n_fields), cfg.dtype)
+            * ((sizes[i] * cfg.n_fields) ** -0.5)
+            for i in range(len(cfg.cin_layers))
+        ]
+        p["cin_out"] = L.dense_init(ks[4], sum(cfg.cin_layers), 1, cfg.dtype, bias=True)
+    if cfg.interaction == "self-attn":
+        d_l = cfg.embed_dim
+        layers = []
+        keys = jax.random.split(ks[5], cfg.attn_layers)
+        for i in range(cfg.attn_layers):
+            kq, kk, kv, kr = jax.random.split(keys[i], 4)
+            d_out = cfg.attn_heads * cfg.d_attn
+            layers.append({
+                "wq": L.dense_init(kq, d_l, d_out, cfg.dtype),
+                "wk": L.dense_init(kk, d_l, d_out, cfg.dtype),
+                "wv": L.dense_init(kv, d_l, d_out, cfg.dtype),
+                "wr": L.dense_init(kr, d_l, d_out, cfg.dtype),
+            })
+            d_l = d_out
+        p["attn"] = layers
+        p["attn_out"] = L.dense_init(ks[6], cfg.n_fields * d_l, 1, cfg.dtype, bias=True)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# interactions
+# ---------------------------------------------------------------------------
+
+
+def fm_second_order(emb: jnp.ndarray) -> jnp.ndarray:
+    """(B, F, D) -> (B,)  0.5 * sum_d[(sum_f v)^2 − sum_f v^2]  (ref path;
+    the Pallas kernel repro.kernels.fm_interaction computes the same)."""
+    s = jnp.sum(emb, axis=1)
+    sq = jnp.sum(emb * emb, axis=1)
+    return 0.5 * jnp.sum(s * s - sq, axis=1)
+
+
+def cin(emb: jnp.ndarray, weights, out_proj) -> jnp.ndarray:
+    """Compressed Interaction Network (xDeepFM §3). emb (B, F, D) -> (B,)."""
+    x0 = emb  # (B, F, D)
+    xk = emb
+    pooled = []
+    for W in weights:  # W (H_next, H_k, F)
+        # z[b, h, m, d] = xk[b, h, d] * x0[b, m, d]; contract with W
+        xk = jnp.einsum("bhd,bmd,ohm->bod", xk, x0, W)
+        pooled.append(jnp.sum(xk, axis=2))  # (B, H_next)
+    feat = jnp.concatenate(pooled, axis=1)
+    return L.dense(out_proj, feat)[:, 0]
+
+
+def autoint_layers(emb: jnp.ndarray, layers, heads: int, d_attn: int) -> jnp.ndarray:
+    """Stacked multi-head self-attention over fields. (B, F, D) -> (B, F, d')."""
+    x = emb
+    for p in layers:
+        B, F, _ = x.shape
+        q = L.dense(p["wq"], x).reshape(B, F, heads, d_attn)
+        k = L.dense(p["wk"], x).reshape(B, F, heads, d_attn)
+        v = L.dense(p["wv"], x).reshape(B, F, heads, d_attn)
+        s = jnp.einsum("bfhd,bghd->bhfg", q, k) * (d_attn ** -0.5)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", a, v).reshape(B, F, heads * d_attn)
+        x = jax.nn.relu(o + L.dense(p["wr"], x))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# forward / loss / serving
+# ---------------------------------------------------------------------------
+
+
+def forward_logits(params, ids: jnp.ndarray, cfg: RecsysConfig) -> jnp.ndarray:
+    """ids (B, F, H) -> logits (B,)."""
+    emb = embedding_bag(params["table"], ids, cfg.spec, mode=cfg.emb_mode)  # (B, F, D)
+    emb = constrain(emb, "batch", None, None)
+    wide = embedding_bag(params["wide"], ids, EmbeddingSpec(cfg.vocab_sizes, 1),
+                         mode=cfg.emb_mode)
+    first_order = jnp.sum(wide[..., 0], axis=1)  # (B,)
+
+    logit = params["bias"] + first_order
+    flat = emb.reshape(emb.shape[0], -1)
+    if cfg.interaction == "fm":
+        logit = logit + fm_second_order(emb)
+        logit = logit + L.mlp_head_apply(params["mlp"], flat)[:, 0]
+    elif cfg.interaction == "cin":
+        logit = logit + cin(emb, params["cin"], params["cin_out"])
+        logit = logit + L.mlp_head_apply(params["mlp"], flat)[:, 0]
+    elif cfg.interaction == "concat":
+        logit = logit + L.mlp_head_apply(params["mlp"], flat)[:, 0]
+    elif cfg.interaction == "self-attn":
+        h = autoint_layers(emb, params["attn"], cfg.attn_heads, cfg.d_attn)
+        logit = logit + L.dense(params["attn_out"], h.reshape(h.shape[0], -1))[:, 0]
+    else:
+        raise ValueError(cfg.interaction)
+    return logit.astype(jnp.float32)
+
+
+def bce_loss(params, batch, cfg: RecsysConfig) -> jnp.ndarray:
+    """batch: ids (B, F, H) int32, labels (B,) float."""
+    z = forward_logits(params, batch["ids"], cfg)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def serve_scores(params, ids: jnp.ndarray, cfg: RecsysConfig) -> jnp.ndarray:
+    return jax.nn.sigmoid(forward_logits(params, ids, cfg))
+
+
+def item_embeddings(params, item_ids: jnp.ndarray, cfg: RecsysConfig) -> jnp.ndarray:
+    """Item-side feature vectors (for DPP similarity). item_ids (M,) local
+    ids within the item field -> (M, D) l2-normalized."""
+    offs = int(cfg.spec.offsets[cfg.item_field])
+    rows = jnp.take(params["table"], item_ids + offs, axis=0)
+    return rows / jnp.maximum(jnp.linalg.norm(rows, axis=-1, keepdims=True), 1e-9)

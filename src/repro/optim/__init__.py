@@ -1,0 +1,9 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import cosine_warmup, constant_lr
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    ErrorFeedbackState,
+    ef_init,
+    ef_compress_grads,
+)

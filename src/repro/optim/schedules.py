@@ -1,0 +1,16 @@
+"""LR schedules as pure step -> scale functions (multiplied onto cfg.lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(step):
+    return jnp.ones_like(step, jnp.float32)
+
+
+def cosine_warmup(step, warmup: int = 100, total: int = 10000, floor: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = jnp.minimum(t / max(warmup, 1), 1.0)
+    prog = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

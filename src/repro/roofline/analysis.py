@@ -1,0 +1,112 @@
+"""Three-term roofline from a compiled dry-run artifact (DESIGN.md §7).
+
+Hardware model: TPU v5e —
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+  compute    = HLO_FLOPs / (chips * peak)
+  memory     = HLO_bytes / (chips * hbm_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` FLOPs/bytes are for the per-device partitioned module
+on this jax version — detected and normalized so the table always reports
+GLOBAL quantities (x chips) with per-chip terms in seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.roofline.hlo_collectives import analyze_hlo, collective_op_counts
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_global: float
+    hlo_bytes_global: float
+    coll_bytes_global: float
+    coll_by_kind: Dict[str, float]
+    coll_op_counts: Dict[str, int]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_ratio: float
+    memory_stats: Optional[dict] = None
+    notes: str = ""
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: dict,
+    hlo_text: str,
+    model_flops: float,
+    memory_stats: Optional[dict] = None,
+    notes: str = "",
+) -> RooflineReport:
+    # cost_analysis() counts while (scan) bodies once — use the
+    # trip-weighted HLO walk instead (per-device), x chips for global.
+    walk = analyze_hlo(hlo_text)
+    flops_global = walk["_flops"] * chips
+    bytes_global = walk["_mem_bytes"] * chips
+    coll = {k: v for k, v in walk.items() if not k.startswith("_")}
+    coll["_total"] = walk["_total"]
+    coll_global = walk["_total"] * chips
+    # raw cost_analysis kept for reference / cross-checks
+    raw_flops = float(cost.get("flops", 0.0)) * chips
+    raw_bytes = float(cost.get("bytes accessed", 0.0)) * chips
+
+    t_comp = flops_global / (chips * PEAK_FLOPS)
+    t_mem = bytes_global / (chips * HBM_BW)
+    t_coll = coll_global / (chips * LINK_BW)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops_global=flops_global, hlo_bytes_global=bytes_global,
+        coll_bytes_global=coll_global,
+        coll_by_kind={k: v * chips for k, v in coll.items() if k != "_total"},
+        coll_op_counts=collective_op_counts(hlo_text),
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_flops_ratio=(model_flops / flops_global) if flops_global else 0.0,
+        memory_stats=dict(memory_stats or {}, raw_cost_flops_global=raw_flops,
+                          raw_cost_bytes_global=raw_bytes),
+        notes=notes,
+    )
+
+
+def roofline_fraction(r: RooflineReport) -> float:
+    """MODEL_FLOPS-time over the dominant term: how close the compiled
+    program is to the hardware bound if perfectly overlapped."""
+    ideal = r.model_flops / (r.chips * PEAK_FLOPS)
+    dom = max(r.t_compute, r.t_memory, r.t_collective)
+    return ideal / dom if dom > 0 else 0.0
+
+
+def save_report(path: str, report: RooflineReport):
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        data = {}
+    data[f"{report.arch}|{report.shape}|{report.mesh}"] = report.to_dict()
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)

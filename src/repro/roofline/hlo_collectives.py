@@ -1,0 +1,336 @@
+"""Post-SPMD HLO accounting: collectives, dot FLOPs, HBM traffic.
+
+``compiled.as_text()`` is the per-device partitioned module.  Three
+corrections a naive reading gets wrong:
+
+1. **Trip weighting** — collectives/FLOPs/bytes inside ``while`` bodies
+   (layer scans, attention chunk scans) execute once per trip; the parser
+   builds the computation call graph, estimates trip counts from each
+   loop condition's comparison constant, and multiplies.
+2. **In-place slice ops** — dynamic-(update-)slice moves only the slice,
+   not the buffer.
+3. **Fusion slice-reads** — a fusion whose callee consumes a parameter
+   only through dynamic-slice/slice reads only slice-sized bytes of that
+   operand (scan xs/ys buffers); likewise a fusion whose root is a
+   dynamic-update-slice writes only the update.
+
+Per-collective transferred-bytes model (ring algorithms, per device):
+  all-gather:        out_bytes * (g-1)/g      (out is the gathered buffer)
+  all-reduce:        2 * bytes * (g-1)/g
+  reduce-scatter:    out_bytes * (g-1)        (out is the scattered shard)
+  all-to-all:        bytes * (g-1)/g
+  collective-permute: bytes
+where g = replica-group size parsed from the instruction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CALL_RE = re.compile(r"(?:to_apply|body|condition|calls)=%?([\w\.\-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"([\w\-]+)\(")
+
+_MEM_OPS = {
+    "fusion", "dot", "copy", "convert", "transpose", "broadcast", "reduce",
+    "pad", "concatenate", "gather", "scatter", "dynamic-slice", "slice",
+    "dynamic-update-slice", "sort", "iota", "reverse", "select", "add",
+    "multiply", "subtract", "divide", "exponential", "log", "rsqrt", "tanh",
+    "compare", "maximum", "minimum", "rng", "clamp", "custom-call", "reshape",
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over all shapes in a result type (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    return m.group(1), [int(d) for d in m.group(2).split(",") if d != ""]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def _transfer_bytes(kind: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(result_bytes) * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+def _operand_names(rhs: str, op: str) -> List[str]:
+    m = re.search(rf"{re.escape(op)}(?:-start)?\(([^)]*)\)", rhs)
+    if not m:
+        return []
+    return [
+        t.strip().lstrip("%").split(" ")[-1].lstrip("%")
+        for t in m.group(1).split(",")
+        if t.strip()
+    ]
+
+
+@dataclasses.dataclass
+class RawComp:
+    name: str
+    lines: List[Tuple[str, str, str, str]]  # (instr_name, op, type_text, rhs)
+    shapes: Dict[str, str]  # instr name -> type text
+    max_const: int = 1
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    collectives: List[Tuple[str, float, int]] = dataclasses.field(default_factory=list)
+    calls: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    while_pairs: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    max_const: int = 1
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+
+
+def _parse_raw(hlo: str) -> Dict[str, RawComp]:
+    comps: Dict[str, RawComp] = {}
+    cur: Optional[RawComp] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        hdr = _COMP_HDR_RE.match(raw) if (raw and not raw.startswith(" ")) else None
+        if hdr and "{" in raw:
+            cur = RawComp(hdr.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if cur is None or not line or line.startswith("}") or line.startswith("//"):
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        name = name.lstrip("%")
+        if name.startswith("ROOT"):
+            name = name.split()[-1].lstrip("%")
+        mop = _OP_RE.search(rhs)
+        op = mop.group(1) if mop else ""
+        type_text = rhs[: mop.start()] if mop else rhs
+        cur.shapes[name] = type_text
+        cur.lines.append((name, op, type_text, rhs))
+        mc = re.search(r"constant\((\d+)\)", line)
+        if mc:
+            cur.max_const = max(cur.max_const, int(mc.group(1)))
+    return comps
+
+
+def _root_instr(rc: RawComp) -> Optional[Tuple[str, str, str, str]]:
+    return rc.lines[-1] if rc.lines else None
+
+
+def _param_access_bytes(rc: RawComp, param_idx: int, full_bytes: int) -> int:
+    """Bytes a fusion actually reads of operand ``param_idx``: if the
+    callee consumes the parameter only via (dynamic-)slice, count the
+    slice results; else the full operand."""
+    pname = None
+    for name, op, type_text, rhs in rc.lines:
+        if op == "parameter" and rhs.rstrip().endswith(f"parameter({param_idx})"):
+            pname = name
+            break
+    if pname is None:
+        return full_bytes
+    consumers = []
+    for name, op, type_text, rhs in rc.lines:
+        if op == "parameter":
+            continue
+        if re.search(rf"%{re.escape(pname)}\b", rhs):
+            consumers.append((op, type_text))
+    if not consumers:
+        return 0
+    if all(op in ("dynamic-slice", "slice", "gather") for op, _ in consumers):
+        return sum(_shape_bytes(t) for _, t in consumers)
+    if all(op == "dynamic-update-slice" for op, _ in consumers):
+        return 0  # pass-through buffer being updated in place
+    return full_bytes
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    raw = _parse_raw(hlo)
+    comps: Dict[str, Computation] = {}
+
+    for rname, rc in raw.items():
+        c = Computation(rname, max_const=rc.max_const)
+        comps[rname] = c
+        for name, op, type_text, rhs in rc.lines:
+            # while loops
+            if op == "while" or re.search(r"\bwhile\(", rhs):
+                body = re.search(r"body=%?([\w\.\-]+)", rhs)
+                cond = re.search(r"condition=%?([\w\.\-]+)", rhs)
+                if body and cond:
+                    c.while_pairs.append((body.group(1), cond.group(1)))
+                continue
+            # collectives
+            matched = False
+            for kind in _COLL_KINDS:
+                if re.search(rf"\b{kind}(?:-start)?\(", rhs) and f"{kind}-done" not in rhs:
+                    b = _shape_bytes(type_text)
+                    c.collectives.append((kind, float(b), _group_size(rhs)))
+                    c.mem_bytes += b
+                    matched = True
+                    break
+                if f"{kind}-done" in rhs:
+                    matched = True
+                    break
+            if matched:
+                continue
+            # dot flops
+            if op == "dot":
+                res = _shape_dims(type_text)
+                opnames = _operand_names(rhs, "dot")
+                mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                if res and opnames and mcd and opnames[0] in rc.shapes:
+                    lhs = _shape_dims(rc.shapes[opnames[0]])
+                    if lhs:
+                        csize = 1
+                        for d in [int(x) for x in mcd.group(1).split(",") if x]:
+                            if d < len(lhs[1]):
+                                csize *= lhs[1][d]
+                        rsize = 1
+                        for d in res[1]:
+                            rsize *= d
+                        c.flops += 2.0 * rsize * csize
+            # calls (fusion callees handled inline below; whiles above)
+            if "body=" not in rhs and "condition=" not in rhs:
+                for m in _CALL_RE.finditer(rhs):
+                    c.calls.append((m.group(1), "call"))
+
+            # memory accounting
+            if op not in _MEM_OPS:
+                continue
+            if op in ("dynamic-slice", "slice"):
+                c.mem_bytes += 2 * _shape_bytes(type_text)
+            elif op == "dynamic-update-slice":
+                opnames = _operand_names(rhs, op)
+                if len(opnames) >= 2 and opnames[1] in rc.shapes:
+                    c.mem_bytes += 2 * _shape_bytes(rc.shapes[opnames[1]])
+            elif op == "fusion":
+                callee_m = re.search(r"calls=%?([\w\.\-]+)", rhs)
+                callee = raw.get(callee_m.group(1)) if callee_m else None
+                opnames = _operand_names(rhs, op)
+                total = 0
+                for i, nm in enumerate(opnames):
+                    full = _shape_bytes(rc.shapes.get(nm, ""))
+                    total += _param_access_bytes(callee, i, full) if callee else full
+                # result: DUS-rooted fusions write only the update
+                root = _root_instr(callee) if callee else None
+                if root is not None and root[1] == "dynamic-update-slice":
+                    upd_ops = _operand_names(root[3], "dynamic-update-slice")
+                    if len(upd_ops) >= 2 and callee and upd_ops[1] in callee.shapes:
+                        total += _shape_bytes(callee.shapes[upd_ops[1]])
+                    else:
+                        total += _shape_bytes(type_text)
+                else:
+                    total += _shape_bytes(type_text)
+                c.mem_bytes += total
+            else:
+                b = _shape_bytes(type_text)
+                for nm in _operand_names(rhs, op):
+                    if nm in rc.shapes:
+                        b += _shape_bytes(rc.shapes[nm])
+                c.mem_bytes += b
+    return comps
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    """Trip-count-weighted per-device totals: collective transferred bytes
+    (by kind + '_total'), dot FLOPs ('_flops'), approx HBM traffic
+    ('_mem_bytes').  Needed because ``compiled.cost_analysis()`` counts
+    while bodies ONCE, undercounting scanned layer stacks by ~n_layers."""
+    comps = parse_computations(hlo)
+    referenced = set()
+    for c in comps.values():
+        for callee, _ in c.calls:
+            referenced.add(callee)
+        for b, cond in c.while_pairs:
+            referenced.add(b)
+            referenced.add(cond)
+    roots = [n for n in comps if n not in referenced]
+    totals: Dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+    totals["_flops"] = 0.0
+    totals["_mem_bytes"] = 0.0
+
+    def visit(name: str, mult: float, depth=0):
+        if name not in comps or depth > 50:
+            return
+        c = comps[name]
+        for kind, b, g in c.collectives:
+            totals[kind] += mult * _transfer_bytes(kind, int(b), g)
+        totals["_flops"] += mult * c.flops
+        totals["_mem_bytes"] += mult * c.mem_bytes
+        for callee, _ in c.calls:
+            if "fused" in callee:  # fusion internals never touch HBM
+                continue
+            visit(callee, mult, depth + 1)
+        for body, cond in c.while_pairs:
+            trips = comps[cond].max_const if cond in comps else 1
+            visit(body, mult * max(trips, 1), depth + 1)
+
+    for r in roots:
+        visit(r, 1.0)
+    totals["_total"] = sum(totals[k] for k in _COLL_KINDS)
+    return totals
+
+
+def collective_bytes_per_device(hlo: str) -> Dict[str, float]:
+    return analyze_hlo(hlo)
+
+
+def collective_op_counts(hlo: str) -> Dict[str, int]:
+    """Static instruction counts (no trip weighting) — for reports."""
+    counts = {k: 0 for k in _COLL_KINDS}
+    for line in hlo.splitlines():
+        for kind in _COLL_KINDS:
+            if re.search(rf"=.*\b{kind}(?:-start)?\(", line):
+                if f"{kind}-done" not in line:
+                    counts[kind] += 1
+                break
+    return counts

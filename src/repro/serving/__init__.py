@@ -1,0 +1,1 @@
+from repro.serving.reranker import DPPRerankConfig, rerank, rerank_batch

@@ -1,0 +1,57 @@
+"""DPP slate re-ranking as a first-class serving stage (DESIGN.md §2, §5).
+
+Any scorer that yields ``(relevance scores, item feature vectors)`` can be
+diversified: shortlist the top-C candidates, build the implicit DPP
+kernel ``L = Diag(a^r) F^T F Diag(a^r)`` over the shortlist, and run the
+paper's fast greedy MAP (Algorithm 1) — all inside the jitted serve step.
+
+``use_kernel=True`` routes the greedy loop through the Pallas
+whole-slate-in-VMEM kernel (interpret-mode on CPU); the default jnp path
+lowers through XLA for the dry-run cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.greedy_chol import dpp_greedy_lowrank
+from repro.core.kernel_matrix import map_relevance
+from repro.kernels.dpp_greedy import dpp_greedy as dpp_greedy_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class DPPRerankConfig:
+    slate_size: int = 50  # N
+    shortlist: int = 1000  # C (the paper's "few hundreds pre-selected")
+    alpha: float = 4.0  # trade-off (paper eq. 21); 1.0 = pure diversity
+    eps: float = 1e-3
+    use_kernel: bool = False  # Pallas path (interpret on CPU)
+
+
+def rerank(scores: jnp.ndarray, feats: jnp.ndarray, cfg: DPPRerankConfig):
+    """scores (M,), feats (M, D) l2-normalized rows -> slate (N,) global ids.
+
+    Returns (indices (N,) int32 into the original M, d_hist (N,)).
+    """
+    C = min(cfg.shortlist, scores.shape[0])
+    top_s, top_i = jax.lax.top_k(scores, C)
+    f = feats[top_i]  # (C, D)
+    V = (f * map_relevance(top_s.astype(jnp.float32), cfg.alpha)[:, None]).T  # (D, C)
+    if cfg.use_kernel:
+        sel, dh = dpp_greedy_pallas(V[None], cfg.slate_size, eps=cfg.eps)
+        sel, dh = sel[0], dh[0]
+    else:
+        res = dpp_greedy_lowrank(V, cfg.slate_size, eps=cfg.eps)
+        sel, dh = res.indices, res.d_hist
+    out = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
+    return out.astype(jnp.int32), dh
+
+
+def rerank_batch(scores: jnp.ndarray, feats: jnp.ndarray, cfg: DPPRerankConfig):
+    """scores (B, M), feats (B, M, D) or shared (M, D)."""
+    if feats.ndim == 2:
+        fn = lambda s: rerank(s, feats, cfg)
+        return jax.vmap(fn)(scores)
+    return jax.vmap(lambda s, f: rerank(s, f, cfg))(scores, feats)

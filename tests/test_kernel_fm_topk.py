@@ -1,0 +1,39 @@
+"""Sweep tests for fm_interaction and scored_topk Pallas kernels."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels.fm_interaction import fm_interaction, fm_interaction_ref
+from repro.kernels.scored_topk import scored_topk, scored_topk_ref
+
+
+@pytest.mark.parametrize("B,F,D", [(8, 4, 8), (64, 39, 16), (130, 26, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fm_interaction_sweep(B, F, D, dtype):
+    rng = np.random.default_rng(B + F + D)
+    emb = jnp.asarray(rng.normal(size=(B, F, D)), dtype)
+    out = fm_interaction(emb, block_b=32, interpret=True)
+    ref = fm_interaction_ref(emb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("M,D,c,bm", [(1024, 16, 8, 256), (4096, 64, 128, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_scored_topk_sweep(M, D, c, bm, dtype):
+    rng = np.random.default_rng(M + D + c)
+    emb = jnp.asarray(rng.normal(size=(M, D)), dtype)
+    q = jnp.asarray(rng.normal(size=(D,)), dtype)
+    vals, idx = scored_topk(emb, q, c=c, block_m=bm, interpret=True)
+    rvals, ridx = scored_topk_ref(emb, q, c)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), rtol=1e-5, atol=1e-5)
+    # indices must match as *sets* (ties may permute within equal values)
+    assert set(np.asarray(idx).tolist()) == set(np.asarray(ridx).tolist())
+
+
+def test_scored_topk_fallback_small():
+    rng = np.random.default_rng(0)
+    emb = jnp.asarray(rng.normal(size=(100, 8)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    vals, idx = scored_topk(emb, q, c=5)
+    rvals, ridx = scored_topk_ref(emb, q, 5)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), rtol=1e-6)

@@ -1,0 +1,90 @@
+"""GraphCast-family GNN: smoke tests + segment-sum message-passing oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data import batched_molecules, neighbor_sample, pad_subgraph, random_graph
+from repro.models import gnn
+
+TINY = gnn.GNNConfig(
+    name="tiny-gnn", n_layers=2, d_hidden=16, d_feat=8, n_vars=3, d_edge=4,
+    dtype=jnp.float32,
+)
+
+
+def test_forward_shapes_and_finite():
+    g = random_graph(50, 200, TINY.d_feat, TINY.n_vars, seed=0)
+    params = gnn.init_params(jax.random.PRNGKey(0), TINY)
+    out = gnn.apply(params, jnp.asarray(g.node_feats), jnp.asarray(g.edges), TINY)
+    assert out.shape == (50, TINY.n_vars)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+
+
+def test_loss_and_grads():
+    g = random_graph(30, 100, TINY.d_feat, TINY.n_vars, seed=1)
+    params = gnn.init_params(jax.random.PRNGKey(0), TINY)
+    batch = {
+        "node_feats": jnp.asarray(g.node_feats),
+        "edges": jnp.asarray(g.edges),
+        "targets": jnp.asarray(g.targets),
+    }
+    loss, grads = jax.value_and_grad(lambda p: gnn.mse_loss(p, batch, TINY))(params)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(a, np.float32)).all() for a in jax.tree.leaves(grads))
+
+
+def test_segment_sum_matches_dense_adjacency():
+    """segment_sum message passing == dense adjacency matmul oracle."""
+    rng = np.random.default_rng(2)
+    N, E, D = 20, 60, 5
+    src = rng.integers(0, N, E).astype(np.int32)
+    dst = rng.integers(0, N, E).astype(np.int32)
+    msgs = rng.normal(size=(E, D)).astype(np.float32)
+    got = jax.ops.segment_sum(jnp.asarray(msgs), jnp.asarray(dst), num_segments=N)
+    A = np.zeros((N, E), np.float32)
+    A[dst, np.arange(E)] = 1.0
+    np.testing.assert_allclose(np.asarray(got), A @ msgs, rtol=1e-5, atol=1e-5)
+
+
+def test_edge_mask_excludes_padding():
+    g = random_graph(25, 80, TINY.d_feat, TINY.n_vars, seed=3)
+    params = gnn.init_params(jax.random.PRNGKey(0), TINY)
+    feats, edges = jnp.asarray(g.node_feats), jnp.asarray(g.edges)
+    out_ref = gnn.apply(params, feats, edges, TINY)
+    # append garbage edges, masked off -> identical output
+    bad = jnp.asarray([[0, 1], [3, 4], [7, 7]], jnp.int32)
+    edges_pad = jnp.concatenate([edges, bad])
+    mask = jnp.asarray([True] * 80 + [False] * 3)
+    out_pad = gnn.apply(params, feats, edges_pad, TINY, edge_mask=mask)
+    np.testing.assert_allclose(np.asarray(out_pad), np.asarray(out_ref), rtol=1e-4, atol=1e-5)
+
+
+def test_neighbor_sampler_subgraph():
+    g = random_graph(200, 1200, TINY.d_feat, TINY.n_vars, seed=4)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(200, size=16, replace=False)
+    sub = neighbor_sample(g, seeds, fanouts=(5, 3), rng=rng)
+    assert sub["node_feats"].shape[0] == sub["node_ids"].shape[0]
+    # every edge endpoint is a valid local node id
+    if sub["edges"].size:
+        assert sub["edges"].max() < sub["node_ids"].shape[0]
+    padded = pad_subgraph(sub, max_nodes=512, max_edges=2048)
+    params = gnn.init_params(jax.random.PRNGKey(0), TINY)
+    loss = gnn.mse_loss(
+        params, {k: jnp.asarray(v) for k, v in padded.items()}, TINY
+    )
+    assert np.isfinite(float(loss))
+
+
+def test_batched_molecules_disjoint():
+    batch = batched_molecules(8, nodes_per=10, edges_per=20, d_feat=TINY.d_feat,
+                              n_vars=TINY.n_vars, seed=5)
+    params = gnn.init_params(jax.random.PRNGKey(0), TINY)
+    out = gnn.apply(params, jnp.asarray(batch["node_feats"]),
+                    jnp.asarray(batch["edges"]), TINY)
+    assert out.shape == (80, TINY.n_vars)
+    # graph 0's outputs must be independent of graph 7's features
+    feats2 = batch["node_feats"].copy()
+    feats2[70:] += 100.0
+    out2 = gnn.apply(params, jnp.asarray(feats2), jnp.asarray(batch["edges"]), TINY)
+    np.testing.assert_allclose(np.asarray(out[:10]), np.asarray(out2[:10]), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,124 @@
+"""LM transformer family: reduced-config smoke tests + decode consistency."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.moe import MoEConfig
+from repro.models.transformer import (
+    TransformerConfig,
+    decode_step,
+    forward_hidden,
+    init_cache,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+TINY_DENSE = TransformerConfig(
+    name="tiny-dense", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=256, dtype=jnp.float32, chunk_q=16,
+)
+TINY_QKVBIAS = TransformerConfig(
+    name="tiny-qkvbias", n_layers=2, d_model=48, n_heads=4, n_kv_heads=4,
+    d_ff=96, vocab=128, qkv_bias=True, dtype=jnp.float32, chunk_q=16,
+)
+TINY_MIXED = TransformerConfig(
+    name="tiny-mixed", n_layers=6, d_model=32, n_heads=4, n_kv_heads=2,
+    d_ff=64, vocab=64, window=8, global_every=3, dtype=jnp.float32, chunk_q=16,
+)
+TINY_MOE = TransformerConfig(
+    name="tiny-moe", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+    d_ff=48, vocab=64, moe=MoEConfig(n_experts=4, top_k=2, d_ff=48),
+    dtype=jnp.float32, chunk_q=16,
+)
+TINY_MOE_RES = TransformerConfig(
+    name="tiny-moe-res", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+    d_ff=48, vocab=64, moe=MoEConfig(n_experts=4, top_k=2, d_ff=24),
+    moe_dense_residual=True, dtype=jnp.float32, chunk_q=16,
+)
+
+ALL = [TINY_DENSE, TINY_QKVBIAS, TINY_MIXED, TINY_MOE, TINY_MOE_RES]
+
+
+@pytest.mark.parametrize("cfg", ALL, ids=lambda c: c.name)
+def test_forward_and_loss(cfg):
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    B, S = 2, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    hidden, aux, _ = forward_hidden(params, tokens, cfg)
+    assert hidden.shape == (B, S, cfg.d_model)
+    assert not np.isnan(np.asarray(hidden, np.float32)).any()
+    loss = train_loss(params, {"tokens": tokens}, cfg)
+    assert np.isfinite(float(loss))
+    # a fresh model should be near ln(vocab) CE
+    assert abs(float(loss) - np.log(cfg.vocab)) < 2.0
+
+
+@pytest.mark.parametrize("cfg", ALL, ids=lambda c: c.name)
+def test_grads_finite(cfg):
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    g = jax.grad(lambda p: train_loss(p, {"tokens": tokens}, cfg))(params)
+    flat = jax.tree.leaves(g)
+    assert all(np.isfinite(np.asarray(a, np.float32)).all() for a in flat)
+
+
+@pytest.mark.parametrize("cfg", [TINY_DENSE, TINY_MIXED], ids=lambda c: c.name)
+def test_prefill_then_decode_matches_forward(cfg):
+    """prefill(S) + decode steps == forward over the full sequence."""
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S, extra, max_seq = 2, 24, 4, 64
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S + extra), 0, cfg.vocab)
+
+    logits_p, cache = prefill(params, tokens[:, :S], cfg, max_seq)
+    # oracle: full forward logits at each position
+    hidden, _, _ = forward_hidden(params, tokens, cfg)
+    logits_full = np.asarray(
+        (hidden @ params["unembed"]).astype(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_p), logits_full[:, S - 1], rtol=2e-3, atol=2e-3
+    )
+    for t in range(extra):
+        logits_d, cache = decode_step(params, cache, tokens[:, S + t : S + t + 1], cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits_d), logits_full[:, S + t], rtol=2e-3, atol=2e-3
+        )
+
+
+def test_decode_ring_buffer_smaller_than_context():
+    """Mixed arch with context longer than the window: ring cache works."""
+    cfg = TINY_MIXED  # window=8
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S, extra, max_seq = 1, 20, 3, 40
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S + extra), 0, cfg.vocab)
+    logits_p, cache = prefill(params, tokens[:, :S], cfg, max_seq)
+    hidden, _, _ = forward_hidden(params, tokens, cfg)
+    logits_full = np.asarray((hidden @ params["unembed"]).astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(logits_p), logits_full[:, S - 1], rtol=3e-3, atol=3e-3
+    )
+    for t in range(extra):
+        logits_d, cache = decode_step(params, cache, tokens[:, S + t : S + t + 1], cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits_d), logits_full[:, S + t], rtol=3e-3, atol=3e-3
+        )
+
+
+def test_param_count_matches_config():
+    for cfg in ALL:
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(params))
+        expected = cfg.param_count()
+        # qkv biases and router weights are small; allow 2% slack
+        assert abs(actual - expected) / expected < 0.02, (cfg.name, actual, expected)
+
+
+def test_init_cache_groups():
+    cache = init_cache(TINY_MIXED, batch=2, max_seq=32)
+    # window=8 local layers + full(32) global layers -> two groups
+    assert set(cache["groups"].keys()) == {"8", "32"}
+    assert cache["groups"]["8"]["k"].shape == (4, 2, 8, 2, 8)
+    assert cache["groups"]["32"]["k"].shape == (2, 2, 32, 2, 8)

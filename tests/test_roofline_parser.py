@@ -1,0 +1,68 @@
+"""Unit tests for the trip-weighted HLO accounting (the roofline's data
+source): synthetic HLO snippets with known answers."""
+import numpy as np
+
+from repro.roofline.hlo_collectives import (
+    analyze_hlo,
+    collective_op_counts,
+    _shape_bytes,
+    _transfer_bytes,
+)
+
+HLO = """\
+HloModule test, is_scheduled=true
+
+%cond (p: (s32[], f32[8,128])) -> pred[] {
+  %p = (s32[], f32[8,128]{1,0}) parameter(0)
+  %c = s32[] constant(10)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]{1,0}) parameter(0)
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,128]{1,0} all-reduce(%x), replica_groups=[4,2]<=[8], to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,128]{1,0}) tuple(%i2, %ar)
+}
+
+ENTRY %main (a: f32[8,128], b: f32[128,64]) -> f32[8,64] {
+  %a = f32[8,128]{1,0} parameter(0)
+  %b = f32[128,64]{1,0} parameter(1)
+  %w = (s32[], f32[8,128]{1,0}) while(%init), condition=%cond, body=%body
+  %x = f32[8,128]{1,0} get-tuple-element(%w), index=1
+  %ag = f32[8,256]{1,0} all-gather(%x), replica_groups=[4,2]<=[8], dimensions={1}
+  ROOT %dot = f32[8,64]{1,0} dot(%x, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert _shape_bytes("(f32[2,3]{1,0}, bf16[4]{0})") == 24 + 8
+    assert _shape_bytes("s32[]") == 4
+
+
+def test_transfer_model():
+    # all-reduce ring: 2 * size * (g-1)/g
+    assert _transfer_bytes("all-reduce", 1000, 2) == 1000.0
+    assert _transfer_bytes("all-gather", 800, 4) == 600.0
+    assert _transfer_bytes("collective-permute", 5, 8) == 5.0
+    assert _transfer_bytes("all-reduce", 1000, 1) == 0.0
+
+
+def test_trip_weighted_walk():
+    w = analyze_hlo(HLO)
+    # dot flops: 2 * (8*64) * 128, executed once
+    assert w["_flops"] == 2 * 8 * 64 * 128
+    # all-reduce inside the while body runs 10x (cond constant):
+    ar_bytes = 8 * 128 * 4
+    expected_ar = 10 * 2 * ar_bytes * (2 - 1) / 2
+    np.testing.assert_allclose(w["all-reduce"], expected_ar)
+    # all-gather once: out 8*256*4, g=2
+    np.testing.assert_allclose(w["all-gather"], 8 * 256 * 4 * 0.5)
+    counts = collective_op_counts(HLO)
+    assert counts["all-reduce"] == 1 and counts["all-gather"] == 1
