@@ -1,0 +1,77 @@
+"""Windowed-vs-exact sweep (beyond-paper; NeurIPS'18 sliding window).
+
+Fixes the candidate set M and the window w, then grows the slate length
+N up to 8x w.  The claim under test is the incremental sliding-window
+implementation's complexity: per-step cost O(w M), *independent of N* —
+the Cholesky ring ``C (w, M)`` is fixed-size state, whereas the exact
+Algorithm 1 carries O(N M) state whose per-step matvec grows with N.
+
+Expected shape of the CSV: ``win_us_per_step`` flat in N (within noise;
+``win_step_vs_N<w>`` stays ~1x).  The exact path's per-step cost grows
+with N asymptotically, though at CPU benchmark sizes it is still
+dispatch-overhead-dominated — the structural win the window buys is the
+O(w M) state (slate length unbounded, no eps-stop at the kernel rank),
+not the small-N constant.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    GreedySpec,
+    greedy_map,
+    map_relevance,
+)
+
+
+def setup(M, D, seed=0, alpha=2.0):
+    rng = np.random.default_rng(seed)
+    F = jnp.asarray(rng.normal(size=(D, M)), jnp.float32)
+    F = F / jnp.maximum(jnp.linalg.norm(F, axis=0, keepdims=True), 1e-12)
+    r = jnp.asarray(rng.uniform(size=M), jnp.float32)
+    return F * map_relevance(r, alpha)[None, :]
+
+
+def _time(fn, trials):
+    fn().indices.block_until_ready()  # compile + warm
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        fn().indices.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(M=1000, D=100, w=8, trials=3):
+    V = setup(M, D)
+    rows = []
+    for N in (w, 2 * w, 4 * w, 8 * w):
+        win_spec = GreedySpec(k=N, window=w, eps=1e-6)
+        exact_spec = GreedySpec(k=N, eps=1e-6)
+        t_win = _time(lambda: greedy_map(win_spec, V=V), trials)
+        t_exact = _time(lambda: greedy_map(exact_spec, V=V), trials)
+        rows.append((N, w, t_win, t_exact))
+    return rows
+
+
+def main(fast_mode=False):
+    M, D, w = (400, 48, 8) if fast_mode else (1000, 100, 8)
+    trials = 2 if fast_mode else 5
+    rows = run(M=M, D=D, w=w, trials=trials)
+    print("name,us_per_call,derived")
+    base = rows[0][2] / rows[0][0]
+    for N, w, t_win, t_exact in rows:
+        print(
+            f"fig4_windowed_w{w}_N{N},{t_win*1e6:.1f},"
+            f"win_us_per_step={t_win/N*1e6:.2f};"
+            f"exact_us_per_step={t_exact/N*1e6:.2f};"
+            f"win_step_vs_N{rows[0][0]}={t_win/N/base:.2f}x"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     fast = not args.full
 
-    from benchmarks import fig1_speedup, fig2_reference, fig3_tradeoff
+    from benchmarks import fig1_speedup, fig2_reference, fig3_tradeoff, fig4_windowed
 
     print("# Figure 1: original greedy MAP vs Div-DPP (speedup, exactness)")
     fig1_speedup.main(fast_mode=fast)
@@ -26,6 +26,8 @@ def main() -> None:
     fig2_reference.main(fast_mode=fast)
     print("# Figure 3: accuracy-diversity trade-off")
     fig3_tradeoff.main(fast_mode=fast)
+    print("# Figure 4: sliding-window vs exact, N >> w (per-step cost flat in N)")
+    fig4_windowed.main(fast_mode=fast)
 
     print("# Roofline (from dry-run artifacts, if present)")
     try:

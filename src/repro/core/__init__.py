@@ -20,6 +20,14 @@ from repro.core.greedy_chol import (
     dpp_greedy_lowrank,
     dpp_greedy_lowrank_batch,
 )
+from repro.core.windowed import (
+    dpp_greedy_windowed,
+    dpp_greedy_windowed_batch,
+    dpp_greedy_windowed_lowrank,
+    dpp_greedy_windowed_lowrank_batch,
+    dpp_greedy_windowed_rebuild,
+)
+from repro.core.dispatch import GreedySpec, greedy_map
 from repro.core.greedy_naive import greedy_map_naive
 from repro.core.baselines import (
     greedy_avg_select,
@@ -36,6 +44,13 @@ from repro.core.metrics import (
 
 __all__ = [
     "GreedyResult",
+    "GreedySpec",
+    "greedy_map",
+    "dpp_greedy_windowed",
+    "dpp_greedy_windowed_batch",
+    "dpp_greedy_windowed_lowrank",
+    "dpp_greedy_windowed_lowrank_batch",
+    "dpp_greedy_windowed_rebuild",
     "build_kernel_dense",
     "build_kernel_dense_raw",
     "map_relevance",

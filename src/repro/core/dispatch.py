@@ -1,0 +1,118 @@
+"""One front door for greedy DPP MAP inference.
+
+Every greedy variant in the repo — exact Algorithm 1 (dense or low-rank,
+single or batched), the sliding-window incremental variant, and the
+Pallas whole-slate-in-VMEM kernel — is reachable through ``greedy_map``
+with a ``GreedySpec``.  The serving reranker and the benchmark harness
+both dispatch through here, so a config change (say, turning on a
+window for long feeds) never requires touching call sites.
+
+Dispatch rules:
+
+* kernel representation — pass exactly one of ``L`` (dense, (M, M) or
+  (B, M, M)) or ``V`` (low-rank ``L = V^T V``, (D, M) or (B, D, M));
+* ``spec.window`` — ``None`` (or ``>= k``) runs the exact Algorithm 1;
+  smaller windows run the O(w M)-per-step incremental sliding-window
+  greedy (unbounded slate length);
+* ``spec.backend`` — "jnp" lowers through XLA; "pallas" routes low-rank
+  inputs through the TPU kernel (interpret-mode on CPU; dense inputs
+  are rejected — the kernel never materializes L); "auto" picks "jnp".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.greedy_chol import (
+    GreedyResult,
+    dpp_greedy_dense,
+    dpp_greedy_dense_batch,
+    dpp_greedy_lowrank,
+    dpp_greedy_lowrank_batch,
+)
+from repro.core.windowed import (
+    dpp_greedy_windowed,
+    dpp_greedy_windowed_batch,
+    dpp_greedy_windowed_lowrank,
+    dpp_greedy_windowed_lowrank_batch,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GreedySpec:
+    """How to run greedy MAP: slate size, window, backend, tolerance."""
+
+    k: int
+    window: Optional[int] = None  # None = exact Algorithm 1
+    backend: str = "auto"  # "auto" | "jnp" | "pallas"
+    eps: float = 1e-6
+    interpret: bool = True  # Pallas interpret mode (CPU dev/test)
+
+    def windowed(self) -> bool:
+        return self.window is not None and self.window < self.k
+
+
+def greedy_map(
+    spec: GreedySpec,
+    *,
+    L: Optional[jnp.ndarray] = None,
+    V: Optional[jnp.ndarray] = None,
+    mask: Optional[jnp.ndarray] = None,
+) -> GreedyResult:
+    """Run greedy DPP MAP per ``spec`` on a dense (L) or low-rank (V) kernel.
+
+    Accepts single problems (L (M, M) / V (D, M)) and user batches
+    (L (B, M, M) / V (B, D, M)); returns a ``GreedyResult`` whose leaves
+    gain a leading batch dimension in the batched case.
+    """
+    if (L is None) == (V is None):
+        raise ValueError("pass exactly one of L= (dense) or V= (low-rank)")
+    backend = spec.backend
+    if backend not in ("auto", "jnp", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "pallas" and L is not None:
+        raise ValueError(
+            "backend='pallas' needs the low-rank V — the kernel never "
+            "materializes the dense L"
+        )
+
+    if backend == "pallas":
+        from repro.kernels.dpp_greedy import dpp_greedy as dpp_greedy_pallas
+
+        batched = V.ndim == 3
+        Vb = V if batched else V[None]
+        mb = mask if (mask is None or batched) else mask[None]
+        sel, dh = dpp_greedy_pallas(
+            Vb,
+            spec.k,
+            mask=mb,
+            eps=spec.eps,
+            interpret=spec.interpret,
+            window=spec.window,
+        )
+        n = jnp.sum(sel >= 0, axis=-1).astype(jnp.int32)
+        res = GreedyResult(sel, n, dh)
+        if batched:
+            return res
+        return GreedyResult(sel[0], n[0], dh[0])
+
+    if L is not None:
+        batched = L.ndim == 3
+        if spec.windowed():
+            fn = dpp_greedy_windowed_batch if batched else dpp_greedy_windowed
+            return fn(L, spec.k, spec.window, spec.eps, mask)
+        fn = dpp_greedy_dense_batch if batched else dpp_greedy_dense
+        return fn(L, spec.k, spec.eps, mask)
+
+    batched = V.ndim == 3
+    if spec.windowed():
+        fn = (
+            dpp_greedy_windowed_lowrank_batch
+            if batched
+            else dpp_greedy_windowed_lowrank
+        )
+        return fn(V, spec.k, spec.window, spec.eps, mask)
+    fn = dpp_greedy_lowrank_batch if batched else dpp_greedy_lowrank
+    return fn(V, spec.k, spec.eps, mask)

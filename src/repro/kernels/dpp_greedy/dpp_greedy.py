@@ -13,9 +13,19 @@ TPU-native adaptation of the paper's Algorithm 1 (DESIGN.md §3):
   zero HBM round-trips between steps; the grid dimension is the *user
   batch* (one program = one user's slate).
 
-VMEM working set: ``V`` (D*M*4) + ``C`` (N*M*4) + ``d2/e`` rows —
-e.g. D=128, M=4096, N=64: 2 MB + 1 MB, comfortably inside 16 MB v5e VMEM.
-The ops.py wrapper falls back to the pure-jnp path when it would not fit.
+``window=w`` switches to the **sliding-window** kernel (the NeurIPS'18
+long-sequence variant): ``C`` shrinks to a ``(w, M)`` ring of window
+Cholesky rows, so the slate length ``N`` is unbounded while VMEM stays
+O(w M).  Each step is select (argmax over the maintained ``d2``), evict
+(the first-row Cholesky downdate — ``w - 1`` Givens rotations swept over
+the rows of ``C``, with the rotation residue row repairing ``d2``), and
+append (the same eq. 16-18 row append as the full kernel, against the
+post-eviction window).  See ``repro.core.windowed`` for the math.
+
+VMEM working set: ``V`` (D*M*4) + ``C`` (N*M*4, or w*M*4 windowed) +
+``d2/e`` rows — e.g. D=128, M=4096, N=64: 2 MB + 1 MB, comfortably
+inside 16 MB v5e VMEM.  The ops.py wrapper falls back to the pure-jnp
+path when it would not fit.
 """
 from __future__ import annotations
 
@@ -81,11 +91,102 @@ def _kernel(v_ref, mask_ref, sel_ref, dhist_ref, c_ref, *, k: int, eps: float):
     jax.lax.fori_loop(0, k, body, (d2, jnp.asarray(False)))
 
 
-@functools.partial(jax.jit, static_argnames=("k", "eps", "interpret"))
+def _kernel_windowed(
+    v_ref, mask_ref, sel_ref, dhist_ref, c_ref, *, k: int, w: int, eps: float
+):
+    """One user's full slate with a sliding diversity window of ``w``.
+
+    v_ref:    (D, M) f32 — scaled features, L = V^T V
+    mask_ref: (1, M) f32 — 1.0 where selectable
+    sel_ref:  (1, N) i32 out (N = k, unbounded)
+    dhist_ref:(1, N) f32 out
+    c_ref:    (w, M) f32 VMEM scratch — ring of window Cholesky rows in
+              window order (row 0 = oldest pick still in the window)
+    """
+    V = v_ref[...]
+    mask = mask_ref[...]  # (1, M)
+    M = V.shape[1]
+    eps2 = eps * eps
+    tiny = 1e-30
+
+    diag = jnp.sum(V * V, axis=0, keepdims=True)  # (1, M)
+    d2 = jnp.where(mask > 0, diag, NEG_INF)
+    c_ref[...] = jnp.zeros_like(c_ref)
+    sel_ref[...] = jnp.full(sel_ref.shape, -1, jnp.int32)
+    dhist_ref[...] = jnp.zeros(dhist_ref.shape, jnp.float32)
+
+    def body(t, carry):
+        d2, win, stopped = carry
+        # ---- select against the current window of min(t, w) picks
+        j = jnp.argmax(d2[0])
+        dj2 = d2[0, j]
+        stopped = jnp.logical_or(stopped, dj2 <= eps2)
+        dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+
+        # ---- evict the oldest pick: first-row Cholesky downdate as
+        # w - 1 Givens rotations swept over the rows of C; identity
+        # rotation (cos=1, sin=0, read==write row) when not evicting
+        full = jnp.logical_and(t >= w, jnp.logical_not(stopped))
+        u0 = jnp.where(full, c_ref[0:1, :], jnp.zeros((1, M), jnp.float32))
+        win_shift = jnp.roll(win, -1, axis=1)  # win_shift[0, r] = old win[0, r+1]
+
+        def rot(r, u):
+            read = jnp.where(full, r + 1, r)
+            row = pl.load(c_ref, (pl.dslice(read, 1), pl.dslice(0, M)))  # (1, M)
+            idx = jnp.maximum(win_shift[0, r], 0)
+            a = jax.lax.dynamic_slice(row, (0, idx), (1, 1))[0, 0]
+            b = jax.lax.dynamic_slice(u, (0, idx), (1, 1))[0, 0]
+            rho = jnp.maximum(jnp.sqrt(a * a + b * b), tiny)
+            cos = jnp.where(full, a / rho, 1.0)
+            sin = jnp.where(full, b / rho, 0.0)
+            pl.store(c_ref, (pl.dslice(r, 1), pl.dslice(0, M)), cos * row + sin * u)
+            return cos * u - sin * row
+
+        u = jax.lax.fori_loop(0, w - 1, rot, u0)
+        last = c_ref[w - 1 : w, :]
+        c_ref[w - 1 : w, :] = jnp.where(full, jnp.zeros_like(last), last)
+        d2 = jnp.where(full, d2 + u * u, d2)
+        win = jnp.where(full, win_shift.at[0, w - 1].set(-1), win)
+
+        # ---- append j against the post-eviction window (eqs. 16-18)
+        djp = jnp.sqrt(jnp.maximum(d2[0, j], eps2))
+        vj = jax.lax.dynamic_slice(V, (0, j), (V.shape[0], 1))  # (D, 1)
+        lj = jnp.dot(vj.T, V, preferred_element_type=jnp.float32)  # (1, M)
+        cj = jax.lax.dynamic_slice(c_ref[...], (0, j), (w, 1))  # (w, 1)
+        dots = jnp.dot(cj.T, c_ref[...], preferred_element_type=jnp.float32)
+        e = (lj - dots) / djp  # (1, M)
+
+        pos = jnp.minimum(t, w - 1)
+        old = pl.load(c_ref, (pl.dslice(pos, 1), pl.dslice(0, M)))
+        pl.store(
+            c_ref,
+            (pl.dslice(pos, 1), pl.dslice(0, M)),
+            jnp.where(stopped, old, e),
+        )
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, M), 1)
+        d2_next = jnp.where(iota == j, NEG_INF, d2 - e * e)
+        d2 = jnp.where(stopped, d2, d2_next)
+        win_next = jax.lax.dynamic_update_slice(
+            win, j[None, None].astype(jnp.int32), (0, pos)
+        )
+        win = jnp.where(stopped, win, win_next)
+
+        sel_val = jnp.where(stopped, -1, j).astype(jnp.int32)
+        pl.store(sel_ref, (pl.dslice(0, 1), pl.dslice(t, 1)), sel_val[None, None])
+        d_val = jnp.where(stopped, 0.0, dj).astype(jnp.float32)
+        pl.store(dhist_ref, (pl.dslice(0, 1), pl.dslice(t, 1)), d_val[None, None])
+        return d2, win, stopped
+
+    win0 = jnp.full((1, w), -1, jnp.int32)
+    jax.lax.fori_loop(0, k, body, (d2, win0, jnp.asarray(False)))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "window", "eps", "interpret"))
 def dpp_greedy_kernel(
     V: jnp.ndarray,
     mask: jnp.ndarray,
     k: int,
+    window: int | None = None,
     eps: float = 1e-3,
     interpret: bool = True,
 ):
@@ -93,12 +194,19 @@ def dpp_greedy_kernel(
 
     V:    (B, D, M) f32 scaled features (columns = alpha^r_i * f_i)
     mask: (B, M) bool/float — selectable candidates
+    window: sliding diversity window ``w`` (None = full, exact Alg. 1);
+        with ``w < k`` the VMEM state is O(w M) so ``k`` is unbounded.
     Returns (sel (B, k) i32, d_hist (B, k) f32).
     """
     B, D, M = V.shape
     mask = mask.astype(jnp.float32).reshape(B, 1, M)
 
-    kernel = functools.partial(_kernel, k=k, eps=eps)
+    if window is not None and window < k:
+        kernel = functools.partial(_kernel_windowed, k=k, w=window, eps=eps)
+        state_rows = window
+    else:
+        kernel = functools.partial(_kernel, k=k, eps=eps)
+        state_rows = k
     sel, dhist = pl.pallas_call(
         kernel,
         grid=(B,),
@@ -114,7 +222,7 @@ def dpp_greedy_kernel(
             jax.ShapeDtypeStruct((B, 1, k), jnp.int32),
             jax.ShapeDtypeStruct((B, 1, k), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((k, M), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((state_rows, M), jnp.float32)],
         interpret=interpret,
     )(V.astype(jnp.float32), mask)
     return sel[:, 0, :], dhist[:, 0, :]

@@ -3,6 +3,11 @@
 Handles TPU-friendly padding (M to a lane multiple, D to a sublane
 multiple) and falls back to the pure-jnp path when the VMEM working set
 would not fit (large M) or when the caller asks for it.
+
+``window=w`` selects the sliding-window kernel: the Cholesky state in
+VMEM shrinks from (k, M) to (w, M), so the VMEM budget check — and
+therefore the largest candidate set M the kernel accepts — depends on
+``w`` rather than the slate length ``k``.
 """
 from __future__ import annotations
 
@@ -14,7 +19,7 @@ from repro.kernels.dpp_greedy.ref import dpp_greedy_ref
 
 LANE = 128
 SUBLANE = 8
-# V (D*M) + C (N*M) + a few (1, M) rows, all f32, must fit in ~16 MB VMEM.
+# V (D*M) + C (state_rows*M) + a few (1, M) rows, all f32, in ~16 MB VMEM.
 VMEM_BUDGET_BYTES = 12 * 1024 * 1024
 
 
@@ -22,9 +27,10 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-def vmem_bytes(D: int, M: int, k: int) -> int:
+def vmem_bytes(D: int, M: int, state_rows: int) -> int:
+    """VMEM working set; ``state_rows`` is k (full) or w (windowed)."""
     Mp, Dp = _round_up(M, LANE), _round_up(D, SUBLANE)
-    return 4 * (Dp * Mp + _round_up(k, SUBLANE) * Mp + 8 * Mp)
+    return 4 * (Dp * Mp + _round_up(state_rows, SUBLANE) * Mp + 8 * Mp)
 
 
 def dpp_greedy(
@@ -34,21 +40,29 @@ def dpp_greedy(
     eps: float = 1e-3,
     interpret: bool = True,
     force_jnp: bool = False,
+    window: int | None = None,
 ):
     """Batched greedy DPP MAP inference.
 
     V (B, D, M) scaled features, mask (B, M). Returns (sel, d_hist) with
-    shape (B, k); sel slots after an eps-stop hold -1.
+    shape (B, k); sel slots after an eps-stop hold -1.  ``window=w``
+    enforces diversity only against the last w picks (O(w M) VMEM state,
+    unbounded k); ``window >= k`` or None is the exact Algorithm 1.
     """
     B, D, M = V.shape
+    if window is not None and window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
     if mask is None:
         mask = jnp.ones((B, M), bool)
-    if force_jnp or vmem_bytes(D, M, k) > VMEM_BUDGET_BYTES:
-        return dpp_greedy_ref(V, mask, k, eps)
+    state_rows = k if window is None else min(window, k)
+    if force_jnp or vmem_bytes(D, M, state_rows) > VMEM_BUDGET_BYTES:
+        return dpp_greedy_ref(V, mask, k, eps, window=window)
 
     Mp, Dp = _round_up(M, LANE), _round_up(D, SUBLANE)
     if (Mp, Dp) != (M, D):
         V = jnp.pad(V, ((0, 0), (0, Dp - D), (0, Mp - M)))
         mask = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, Mp - M)))
-    sel, dhist = dpp_greedy_kernel(V, mask, k=k, eps=eps, interpret=interpret)
+    sel, dhist = dpp_greedy_kernel(
+        V, mask, k=k, window=window, eps=eps, interpret=interpret
+    )
     return sel, dhist

@@ -3,16 +3,32 @@
 An independent implementation path: ``repro.core.greedy_chol`` keeps the
 Cholesky state as (M, N) columns (the paper's layout), while the kernel
 uses the transposed (N, M) row layout — agreement between the two is a
-meaningful check.
+meaningful check.  The windowed mode is checked against
+``repro.core.windowed``'s incremental path (itself tested against the
+rebuild-every-step reference).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.core.greedy_chol import dpp_greedy_lowrank_batch
+from repro.core.windowed import dpp_greedy_windowed_lowrank_batch
 
 
-def dpp_greedy_ref(V: jnp.ndarray, mask: jnp.ndarray, k: int, eps: float = 1e-3):
+def dpp_greedy_ref(
+    V: jnp.ndarray,
+    mask: jnp.ndarray,
+    k: int,
+    eps: float = 1e-3,
+    window: int | None = None,
+):
     """V (B, D, M), mask (B, M) -> (sel (B, k) i32, d_hist (B, k) f32)."""
-    res = dpp_greedy_lowrank_batch(V.astype(jnp.float32), k, eps, mask.astype(bool))
+    if window is not None and window < k:
+        res = dpp_greedy_windowed_lowrank_batch(
+            V.astype(jnp.float32), k, window, eps, mask.astype(bool)
+        )
+    else:
+        res = dpp_greedy_lowrank_batch(
+            V.astype(jnp.float32), k, eps, mask.astype(bool)
+        )
     return res.indices, res.d_hist

@@ -7,7 +7,7 @@ import; everything else sees the real (single) device.
 """
 from __future__ import annotations
 
-import jax
+from repro.distributed.context import make_mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,14 +15,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: 2 pods x 256 = 512 chips ("pod", "data", "model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over host devices (tests / CPU smoke runs)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh_compat((data, model), ("data", "model"))

@@ -5,20 +5,26 @@ diversified: shortlist the top-C candidates, build the implicit DPP
 kernel ``L = Diag(a^r) F^T F Diag(a^r)`` over the shortlist, and run the
 paper's fast greedy MAP (Algorithm 1) — all inside the jitted serve step.
 
-``use_kernel=True`` routes the greedy loop through the Pallas
-whole-slate-in-VMEM kernel (interpret-mode on CPU); the default jnp path
-lowers through XLA for the dry-run cells.
+All greedy variants are reached through ``repro.core.greedy_map``:
+
+* ``use_kernel=True`` routes through the Pallas whole-slate-in-VMEM
+  kernel (interpret-mode on CPU); the default jnp path lowers through
+  XLA for the dry-run cells.
+* ``window=w`` enforces diversity only against the last ``w`` picks
+  (the NeurIPS'18 sliding-window variant, O(w M) per step) so the
+  serving path can produce long diversified feeds — slates longer than
+  the kernel rank keep selecting instead of eps-stopping.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.greedy_chol import dpp_greedy_lowrank
+from repro.core.dispatch import GreedySpec, greedy_map
 from repro.core.kernel_matrix import map_relevance
-from repro.kernels.dpp_greedy import dpp_greedy as dpp_greedy_pallas
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +34,15 @@ class DPPRerankConfig:
     alpha: float = 4.0  # trade-off (paper eq. 21); 1.0 = pure diversity
     eps: float = 1e-3
     use_kernel: bool = False  # Pallas path (interpret on CPU)
+    window: Optional[int] = None  # sliding diversity window (None = exact)
+
+    def greedy_spec(self) -> GreedySpec:
+        return GreedySpec(
+            k=self.slate_size,
+            window=self.window,
+            backend="pallas" if self.use_kernel else "jnp",
+            eps=self.eps,
+        )
 
 
 def rerank(scores: jnp.ndarray, feats: jnp.ndarray, cfg: DPPRerankConfig):
@@ -39,12 +54,8 @@ def rerank(scores: jnp.ndarray, feats: jnp.ndarray, cfg: DPPRerankConfig):
     top_s, top_i = jax.lax.top_k(scores, C)
     f = feats[top_i]  # (C, D)
     V = (f * map_relevance(top_s.astype(jnp.float32), cfg.alpha)[:, None]).T  # (D, C)
-    if cfg.use_kernel:
-        sel, dh = dpp_greedy_pallas(V[None], cfg.slate_size, eps=cfg.eps)
-        sel, dh = sel[0], dh[0]
-    else:
-        res = dpp_greedy_lowrank(V, cfg.slate_size, eps=cfg.eps)
-        sel, dh = res.indices, res.d_hist
+    res = greedy_map(cfg.greedy_spec(), V=V)
+    sel, dh = res.indices, res.d_hist
     out = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
     return out.astype(jnp.int32), dh
 

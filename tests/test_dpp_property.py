@@ -1,6 +1,14 @@
-"""Property-based tests (hypothesis) for the system's core invariants."""
+"""Property-based tests (hypothesis) for the system's core invariants.
+
+hypothesis is a dev-only dependency (declared in pyproject's ``dev``
+extra and installed in CI); environments without it skip cleanly
+instead of erroring at collection.
+"""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

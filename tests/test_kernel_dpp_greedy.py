@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from repro.core import map_relevance, normalize_columns
 from repro.kernels.dpp_greedy import dpp_greedy, dpp_greedy_ref, vmem_bytes
+from repro.kernels.dpp_greedy.ops import VMEM_BUDGET_BYTES
 
 
 def make_inputs(seed, B, D, M, alpha=2.0, dtype=jnp.float32):
@@ -80,3 +81,63 @@ def test_vmem_fallback():
     V = make_inputs(19, B, D, M)
     sel, _ = dpp_greedy(V, k, force_jnp=True)
     assert int((np.asarray(sel) >= 0).sum()) == k
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window kernel mode (C shrinks to a (w, M) VMEM ring; N unbounded)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B", [1, 2])
+@pytest.mark.parametrize("D,M,k,w", [(16, 64, 16, 4), (32, 256, 24, 6), (16, 128, 40, 1)])
+def test_kernel_windowed_matches_ref(B, D, M, k, w):
+    V = make_inputs(B * 5 + D + M + k + w, B, D, M)
+    sel_k, dh_k = dpp_greedy(V, k, interpret=True, window=w)
+    sel_r, dh_r = dpp_greedy_ref(V, jnp.ones((B, M), bool), k, window=w)
+    np.testing.assert_array_equal(np.asarray(sel_k), np.asarray(sel_r))
+    np.testing.assert_allclose(np.asarray(dh_k), np.asarray(dh_r), rtol=3e-4, atol=1e-5)
+
+
+def test_kernel_windowed_full_window_is_exact():
+    """window >= k dispatches to the exact whole-slate kernel."""
+    B, D, M, k = 2, 16, 128, 8
+    V = make_inputs(23, B, D, M)
+    sel_w, _ = dpp_greedy(V, k, interpret=True, window=k)
+    sel_e, _ = dpp_greedy(V, k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(sel_w), np.asarray(sel_e))
+
+
+def test_kernel_windowed_unbounded_slate():
+    """Slate length beyond the kernel rank: exact eps-stops, windowed
+    keeps selecting with O(w M) VMEM state."""
+    B, D, M, k, w = 1, 12, 128, 40, 6
+    V = make_inputs(29, B, D, M, alpha=1.0)
+    sel_e, _ = dpp_greedy(V, k, eps=1e-3, interpret=True)
+    sel_w, _ = dpp_greedy(V, k, eps=1e-3, interpret=True, window=w)
+    assert int((np.asarray(sel_e) >= 0).sum()) <= D + 3
+    s = np.asarray(sel_w)[0]
+    assert (s >= 0).all()
+    assert len(set(s.tolist())) == k
+
+
+def test_kernel_windowed_mask_and_padding():
+    """Non-aligned M/D + mask through the windowed kernel path."""
+    B, D, M, k, w = 2, 19, 200, 18, 5
+    V = make_inputs(31, B, D, M)
+    rng = np.random.default_rng(1)
+    mask = jnp.asarray(rng.uniform(size=(B, M)) > 0.3)
+    sel_k, _ = dpp_greedy(V, k, mask=mask, interpret=True, window=w)
+    sel_r, _ = dpp_greedy_ref(V, mask, k, window=w)
+    np.testing.assert_array_equal(np.asarray(sel_k), np.asarray(sel_r))
+    for b in range(B):
+        valid = np.asarray(sel_k[b])
+        valid = valid[valid >= 0]
+        assert np.asarray(mask[b])[valid].all()
+
+
+def test_kernel_windowed_vmem_budget_uses_window():
+    """The VMEM gate scales with w, not k: a long slate over a big M
+    fits only because the windowed state is (w, M)."""
+    D, M, k, w = 32, 8192, 512, 8
+    assert vmem_bytes(D, M, k) > VMEM_BUDGET_BYTES  # full kernel would spill
+    assert vmem_bytes(D, M, w) < VMEM_BUDGET_BYTES  # windowed state fits
