@@ -1,0 +1,134 @@
+"""Sharded candidate-axis greedy MAP: weak-scaling sweep (beyond-paper).
+
+Fixes the per-device shard size M/P and grows the candidate set M with
+the device count P.  The claim under test is the sharded subsystem's
+per-step structure: O(w M / P) local work plus one tiny
+argmax-allreduce and one winner-broadcast — so ``us_per_step`` stays
+roughly flat as M grows with M/P fixed.  (On a host-device CPU mesh the
+"devices" share the same cores, so flatness is approximate there; the
+CSV is evidence of the scaling structure, a real multi-chip mesh is
+where the wall-clock win lands.)
+
+XLA pins the host device count at first init, so each P runs in a fresh
+subprocess (same pattern as tests/test_distributed.py); the parent
+collects and prints one CSV row per (mode, P).
+
+  PYTHONPATH=src python -m benchmarks.fig5_sharded [--full | --smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+from repro.launch.hostdev import force_host_device_flags  # jax-import-free
+
+
+def _inner(args) -> None:
+    """Runs inside the subprocess with the device count already forced."""
+    import time
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.sharded import dpp_greedy_sharded
+    from repro.distributed.context import make_mesh_compat
+
+    P = jax.device_count()
+    M = args.mloc * P
+    mesh = make_mesh_compat((P,), ("data",))
+    rng = np.random.default_rng(0)
+    V = jnp.asarray(rng.normal(size=(args.dim, M)), jnp.float32) / np.sqrt(args.dim)
+
+    for label, window in (("exact", None), (f"w{args.window}", args.window)):
+        fn = lambda: dpp_greedy_sharded(
+            V, args.slate, mesh=mesh, window=window, eps=1e-6
+        )
+        fn().indices.block_until_ready()  # compile + warm
+        best = float("inf")
+        for _ in range(args.trials):
+            t0 = time.perf_counter()
+            fn().indices.block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        print(
+            f"fig5_sharded_{label}_P{P}_M{M},{best*1e6:.1f},"
+            f"us_per_step={best/args.slate*1e6:.2f};Mloc={args.mloc};"
+            f"D={args.dim};N={args.slate}"
+        )
+
+
+def run(devices, mloc, dim, slate, window, trials):
+    rows, failures = [], []
+    for P in devices:
+        env = dict(os.environ)
+        # preserve inherited XLA flags, replacing only the device count
+        env["XLA_FLAGS"] = force_host_device_flags(env.get("XLA_FLAGS", ""), P)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (os.path.join(REPO, "src"), env.get("PYTHONPATH", "")) if p
+        )
+        cmd = [
+            sys.executable, "-m", "benchmarks.fig5_sharded", "--inner",
+            "--mloc", str(mloc), "--dim", str(dim), "--slate", str(slate),
+            "--window", str(window), "--trials", str(trials),
+        ]
+        out = subprocess.run(
+            cmd, capture_output=True, text=True, env=env, cwd=REPO, timeout=1200
+        )
+        if out.returncode != 0:
+            tail = out.stderr.strip().splitlines()[-1:] or ["<no stderr>"]
+            print(f"fig5_sharded_P{P},0,error={tail[0]}")
+            failures.append((P, tail[0]))
+            continue
+        for line in out.stdout.strip().splitlines():
+            if line.startswith("fig5_sharded"):
+                print(line)
+                rows.append(line)
+    if failures:
+        # fail loudly so the CI smoke step (and benchmarks.run) go red
+        raise RuntimeError(f"fig5_sharded subprocess failures: {failures}")
+    return rows
+
+
+_PRESETS = {
+    # fast: tiny shapes + 1/2 devices (CI smoke / benchmarks.run default)
+    True: dict(devices=(1, 2), mloc=2048, dim=24, slate=8, window=4, trials=2),
+    False: dict(devices=(1, 2, 4, 8), mloc=65536, dim=32, slate=32, window=8,
+                trials=3),
+}
+
+
+def main(fast_mode: bool = True, **overrides):
+    cfg = dict(_PRESETS[fast_mode])
+    cfg.update({k: v for k, v in overrides.items() if v is not None})
+    print("name,us_per_call,derived")
+    return run(cfg["devices"], cfg["mloc"], cfg["dim"], cfg["slate"],
+               cfg["window"], cfg["trials"])
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--inner", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + 1/2 devices (CI)")
+    # shape flags: honored by both the outer sweep and --inner; unset
+    # values fall back to the --smoke/--full preset
+    ap.add_argument("--mloc", type=int, default=None)
+    ap.add_argument("--dim", type=int, default=None)
+    ap.add_argument("--slate", type=int, default=None)
+    ap.add_argument("--window", type=int, default=None)
+    ap.add_argument("--trials", type=int, default=None)
+    args = ap.parse_args()
+    fast = args.smoke or not args.full
+    for k, v in _PRESETS[fast].items():
+        if k != "devices" and getattr(args, k, None) is None:
+            setattr(args, k, v)
+    if args.inner:
+        _inner(args)
+    else:
+        main(fast_mode=fast, mloc=args.mloc, dim=args.dim, slate=args.slate,
+             window=args.window, trials=args.trials)

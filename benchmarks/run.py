@@ -18,7 +18,13 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     fast = not args.full
 
-    from benchmarks import fig1_speedup, fig2_reference, fig3_tradeoff, fig4_windowed
+    from benchmarks import (
+        fig1_speedup,
+        fig2_reference,
+        fig3_tradeoff,
+        fig4_windowed,
+        fig5_sharded,
+    )
 
     print("# Figure 1: original greedy MAP vs Div-DPP (speedup, exactness)")
     fig1_speedup.main(fast_mode=fast)
@@ -28,6 +34,8 @@ def main() -> None:
     fig3_tradeoff.main(fast_mode=fast)
     print("# Figure 4: sliding-window vs exact, N >> w (per-step cost flat in N)")
     fig4_windowed.main(fast_mode=fast)
+    print("# Figure 5: sharded candidate-axis greedy, M/P fixed (weak scaling)")
+    fig5_sharded.main(fast_mode=fast)
 
     print("# Roofline (from dry-run artifacts, if present)")
     try:

@@ -1,7 +1,7 @@
 """The paper's primary contribution: fast greedy DPP MAP inference
 ("Div-DPP", Chen et al. 2017/2018) plus the kernel construction, the
-naive-greedy oracle, the reference diversifiers and the evaluation
-metrics.  See DESIGN.md §1-§3.
+naive-greedy oracle, the sliding-window and candidate-sharded variants,
+the reference diversifiers and the evaluation metrics.
 """
 from repro.core.kernel_matrix import (
     build_kernel_dense,
@@ -27,7 +27,8 @@ from repro.core.windowed import (
     dpp_greedy_windowed_lowrank_batch,
     dpp_greedy_windowed_rebuild,
 )
-from repro.core.dispatch import GreedySpec, greedy_map
+from repro.core.dispatch import GreedySpec, GreedySpecError, greedy_map
+from repro.core.sharded import dpp_greedy_sharded, sharded_topk
 from repro.core.greedy_naive import greedy_map_naive
 from repro.core.baselines import (
     greedy_avg_select,
@@ -45,7 +46,10 @@ from repro.core.metrics import (
 __all__ = [
     "GreedyResult",
     "GreedySpec",
+    "GreedySpecError",
     "greedy_map",
+    "dpp_greedy_sharded",
+    "sharded_topk",
     "dpp_greedy_windowed",
     "dpp_greedy_windowed_batch",
     "dpp_greedy_windowed_lowrank",

@@ -1,11 +1,13 @@
 """One front door for greedy DPP MAP inference.
 
 Every greedy variant in the repo — exact Algorithm 1 (dense or low-rank,
-single or batched), the sliding-window incremental variant, and the
-Pallas whole-slate-in-VMEM kernel — is reachable through ``greedy_map``
-with a ``GreedySpec``.  The serving reranker and the benchmark harness
-both dispatch through here, so a config change (say, turning on a
-window for long feeds) never requires touching call sites.
+single or batched), the sliding-window incremental variant, the Pallas
+whole-slate-in-VMEM kernel, and the candidate-sharded multi-device path
+— is reachable through ``greedy_map`` with a ``GreedySpec``.  The
+serving reranker and the benchmark harness both dispatch through here,
+so a config change (say, turning on a window for long feeds, or
+spreading the candidate axis over a mesh) never requires touching call
+sites.
 
 Dispatch rules:
 
@@ -16,7 +18,14 @@ Dispatch rules:
   greedy (unbounded slate length);
 * ``spec.backend`` — "jnp" lowers through XLA; "pallas" routes low-rank
   inputs through the TPU kernel (interpret-mode on CPU; dense inputs
-  are rejected — the kernel never materializes L); "auto" picks "jnp".
+  are rejected — the kernel never materializes L); "sharded" shards the
+  candidate axis M over ``spec.mesh``'s ``spec.axis_name`` (low-rank,
+  single-problem); "auto" picks "sharded" when a mesh is set, else
+  "jnp".
+
+``GreedySpec`` validates itself at construction — a bad config raises
+``GreedySpecError`` (a ``ValueError``) at spec-build time instead of
+surfacing as a shape or trace error deep inside a jitted computation.
 """
 from __future__ import annotations
 
@@ -39,19 +48,50 @@ from repro.core.windowed import (
     dpp_greedy_windowed_lowrank_batch,
 )
 
+_BACKENDS = ("auto", "jnp", "pallas", "sharded")
+
+
+class GreedySpecError(ValueError):
+    """Invalid ``GreedySpec`` — raised at spec construction time."""
+
 
 @dataclasses.dataclass(frozen=True)
 class GreedySpec:
-    """How to run greedy MAP: slate size, window, backend, tolerance."""
+    """How to run greedy MAP: slate size, window, backend, mesh, tolerance."""
 
     k: int
     window: Optional[int] = None  # None = exact Algorithm 1
-    backend: str = "auto"  # "auto" | "jnp" | "pallas"
+    backend: str = "auto"  # "auto" | "jnp" | "pallas" | "sharded"
     eps: float = 1e-6
     interpret: bool = True  # Pallas interpret mode (CPU dev/test)
+    mesh: Optional[object] = None  # jax Mesh for the sharded backend
+    axis_name: str = "data"  # mesh axis the candidate axis shards over
+
+    def __post_init__(self):
+        if self.k <= 0:
+            raise GreedySpecError(f"k must be >= 1, got {self.k}")
+        if self.window is not None and self.window < 1:
+            raise GreedySpecError(f"window must be >= 1, got {self.window}")
+        if self.backend not in _BACKENDS:
+            raise GreedySpecError(
+                f"unknown backend {self.backend!r}; expected one of {_BACKENDS}"
+            )
+        if self.backend == "sharded" and self.mesh is None:
+            raise GreedySpecError("backend='sharded' needs mesh= (and axis_name=)")
+        if self.mesh is not None and self.backend not in ("auto", "sharded"):
+            raise GreedySpecError(
+                f"mesh= only applies to the sharded backend (backend='sharded' "
+                f"or 'auto'), not {self.backend!r} — a mesh with a "
+                f"single-device backend would be silently ignored"
+            )
 
     def windowed(self) -> bool:
         return self.window is not None and self.window < self.k
+
+    def sharded(self) -> bool:
+        return self.backend == "sharded" or (
+            self.backend == "auto" and self.mesh is not None
+        )
 
 
 def greedy_map(
@@ -65,20 +105,41 @@ def greedy_map(
 
     Accepts single problems (L (M, M) / V (D, M)) and user batches
     (L (B, M, M) / V (B, D, M)); returns a ``GreedyResult`` whose leaves
-    gain a leading batch dimension in the batched case.
+    gain a leading batch dimension in the batched case.  The sharded
+    backend is single-problem, low-rank only.
     """
     if (L is None) == (V is None):
         raise ValueError("pass exactly one of L= (dense) or V= (low-rank)")
-    backend = spec.backend
-    if backend not in ("auto", "jnp", "pallas"):
-        raise ValueError(f"unknown backend {backend!r}")
-    if backend == "pallas" and L is not None:
+    if spec.backend == "pallas" and L is not None:
         raise ValueError(
             "backend='pallas' needs the low-rank V — the kernel never "
             "materializes the dense L"
         )
 
-    if backend == "pallas":
+    if spec.sharded():
+        if L is not None:
+            raise ValueError(
+                "backend='sharded' needs the low-rank V — a dense L cannot "
+                "be candidate-sharded"
+            )
+        if V.ndim == 3:
+            raise ValueError(
+                "backend='sharded' reranks one slate at a time (V (D, M)); "
+                "compose the user batch at the caller (see ROADMAP)"
+            )
+        from repro.core.sharded import dpp_greedy_sharded
+
+        return dpp_greedy_sharded(
+            V,
+            spec.k,
+            mesh=spec.mesh,
+            axis_name=spec.axis_name,
+            window=spec.window,
+            eps=spec.eps,
+            mask=mask,
+        )
+
+    if spec.backend == "pallas":
         from repro.kernels.dpp_greedy import dpp_greedy as dpp_greedy_pallas
 
         batched = V.ndim == 3

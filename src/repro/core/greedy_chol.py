@@ -9,7 +9,7 @@ Incremental-Cholesky greedy MAP approximation (paper §4.2):
   ``c_i <- [c_i e_i]``, ``d_i^2 <- d_i^2 - e_i^2``             — O(Mk);
 * stop when ``#Y = N`` or ``d_j <= eps`` (eq. 20, justified by Thm 4.1).
 
-TPU adaptation (DESIGN.md §3): ``c`` is pre-allocated ``(M, N)`` zeros and
+TPU adaptation: ``c`` is pre-allocated ``(M, N)`` zeros and
 column ``k`` is written at step ``k``; zero-padding makes the full-width
 matvec ``c @ c_j`` exact, so each step is one MXU-friendly ``(M,N)x(N,)``
 matvec.  Total work O(M N^2), memory O(M N) — the paper's complexity.
@@ -124,7 +124,9 @@ def dpp_greedy_lowrank(
     """Algorithm 1 on the implicit kernel ``L = V^T V``, ``V (D, M)``.
 
     Row ``L_j = V[:, j] @ V`` is recomputed per step — O(DM) extra FLOPs
-    per step traded for O(M^2) memory never allocated (DESIGN.md §3).
+    per step traded for O(M^2) memory never allocated.  For candidate
+    sets larger than one device holds, ``repro.core.sharded`` runs this
+    same recurrence with the M axis sharded over a mesh.
     """
     if mask is None:
         mask = jnp.ones((V.shape[1],), bool)

@@ -16,8 +16,9 @@ Two representations are supported:
   ``F in (D, M)``; the kernel is represented by the *scaled feature*
   matrix ``V = F * m(r)`` so that ``L = V^T V`` and any row
   ``L_j = V[:, j]^T V`` is recomputed on the fly.  This never
-  materializes ``O(M^2)`` memory and is the TPU-native serving path
-  (see DESIGN.md §3).
+  materializes ``O(M^2)`` memory and is the TPU-native serving path;
+  it is also what lets ``repro.core.sharded`` shard the candidate axis
+  (each device only needs its column shard of ``V``).
 """
 from __future__ import annotations
 

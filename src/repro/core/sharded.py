@@ -1,0 +1,350 @@
+"""Sharded candidate-axis greedy MAP — one slate over millions of candidates.
+
+The paper's Algorithm 1 costs O(D M) per step on the low-rank kernel
+``L = V^T V``; the per-step work (a candidate matvec plus an argmax) is
+embarrassingly parallel over the candidate axis M, exactly the structure
+Han et al. (arXiv:1703.03389) exploit for parallel greedy DPP inference.
+Because each candidate only needs its own column of ``V`` (Gartrell et
+al., arXiv:1602.05436 low-rank factorization), device ``p`` of a
+P-device mesh computes on just the ``(D, M/P)`` column shard plus its
+slice of the ``c``/``d2`` Cholesky state — the dense ``(M, M)`` kernel
+``L`` never exists anywhere.  (The eager front end below still builds
+the full ``(D, M)`` ``V`` on the host before resharding; feeding the
+shards straight from a sharded feature store is a ROADMAP item.)
+
+Per greedy step, inside one ``shard_map``:
+
+1. **local update** — each device updates its candidate shard
+   (O(D M / P) exact, O(w M / P) windowed);
+2. **global argmax** — an all-gather allreduce of per-device
+   ``(d2_max, global_index)`` pairs (P tiny pairs), first-occurrence
+   tie-breaking identical to a single-device ``argmax``;
+3. **winner broadcast** — one psum replicates the winning column's data
+   (``V[:, j]``, its Cholesky column ``c_j`` and, windowed, the repaired
+   ``d2[j]``) from the owner shard to everyone.
+
+The sliding-window variant additionally psum-gathers the tiny ``(w, w)``
+window factor ``C[:, win]`` each step so every device computes the same
+Givens eviction rotations from the same bits.  The selected slate
+matches the single-device ``dpp_greedy_lowrank`` /
+``dpp_greedy_windowed_lowrank`` paths on the gathered ``V`` index for
+index (same argmax sequence, same tie-breaking); the marginal-gain
+history agrees to ~1 ulp — XLA may compile the per-shard ``(D, M/P)``
+reductions with a different op order than the ``(D, M)`` shapes.
+
+Front doors: ``greedy_map(GreedySpec(backend="sharded", mesh=...))``
+dispatches here; serving goes through
+``repro.serving.sharded_rerank`` (which also replaces the single-device
+``jax.lax.top_k`` shortlist with ``sharded_topk``); the
+``repro.launch.serve_sharded`` driver and ``benchmarks/fig5_sharded.py``
+demonstrate the path end to end on a host-device mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.greedy_chol import NEG_INF, GreedyResult
+from repro.distributed.context import shard_map_compat
+
+
+def _mesh_axis_size(mesh, axis_name: str) -> int:
+    if axis_name not in mesh.shape:
+        raise ValueError(
+            f"mesh has no axis {axis_name!r}; mesh axes: {tuple(mesh.shape)}"
+        )
+    return mesh.shape[axis_name]
+
+
+def _global_argmax(d2, ax, off, axis_name):
+    """(d2_max, global index, owner?) via a P-pair all-gather allreduce.
+
+    Gathered in axis-index order, so ``argmax`` over the per-device maxima
+    breaks ties toward the lowest shard — combined with the local
+    ``argmax``'s first-occurrence rule this reproduces a single-device
+    ``argmax`` over the concatenated candidate axis exactly.
+
+    ``ax``/``off`` (axis index, shard offset) are computed once outside
+    the greedy loop and passed in: a ``jax.lax.axis_index`` *inside* a
+    ``fori_loop`` body can survive XLA simplification as a raw
+    PartitionId op the SPMD partitioner rejects (observed on jax 0.4.x
+    when the w=1 eviction loop folds away).
+    """
+    jl = jnp.argmax(d2).astype(jnp.int32)
+    dv = jax.lax.all_gather(d2[jl], axis_name)  # (P,)
+    gv = jax.lax.all_gather(jl + off, axis_name)
+    p = jnp.argmax(dv)
+    return jl, dv[p], gv[p], p == ax
+
+
+def _bcast_from_owner(parts, owner, axis_name):
+    """Replicate the owner shard's small vectors to every device (one psum)."""
+    z = jnp.concatenate([jnp.atleast_1d(x) for x in parts])
+    return jax.lax.psum(jnp.where(owner, z, jnp.zeros_like(z)), axis_name)
+
+
+def _exact_body(k: int, eps: float, axis_name: str):
+    """Algorithm 1 with the candidate axis sharded; mirrors
+    ``greedy_chol._greedy_loop`` operation-for-operation on each shard."""
+
+    def body_fn(Vl, maskl):
+        D, Mloc = Vl.shape
+        dtype = Vl.dtype
+        eps2 = jnp.asarray(eps, dtype) ** 2
+        ax = jax.lax.axis_index(axis_name)
+        off = ax.astype(jnp.int32) * Mloc
+
+        diag = jnp.sum(Vl * Vl, axis=0)
+        d2 = jnp.where(maskl, diag, NEG_INF)
+        C = jnp.zeros((Mloc, k), dtype)
+        sel = jnp.full((k,), -1, jnp.int32)
+        d_hist = jnp.zeros((k,), dtype)
+
+        def body(t, state):
+            C, d2, sel, d_hist, stopped = state
+            jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
+            stopped = stopped | (dj2 <= eps2)
+            dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+            # winner broadcast: V[:, j] and its Cholesky column c_j
+            z = _bcast_from_owner((Vl[:, jl], C[jl, :]), owner, axis_name)
+            vj, cj = z[:D], z[D:]
+            # local shard of the update (eqs. 16-18): e = (L_j - c c_j) / d_j
+            e = (vj @ Vl - C @ cj) / dj
+            e = jnp.where(stopped, jnp.zeros_like(e), e)
+            C = C.at[:, t].set(e)
+            d2_next = d2 - e * e
+            d2_next = d2_next.at[jl].set(jnp.where(owner, NEG_INF, d2_next[jl]))
+            d2 = jnp.where(stopped, d2, d2_next)
+            sel = sel.at[t].set(jnp.where(stopped, -1, j))
+            d_hist = d_hist.at[t].set(jnp.where(stopped, 0.0, dj))
+            return C, d2, sel, d_hist, stopped
+
+        state = (C, d2, sel, d_hist, jnp.asarray(False))
+        _, _, sel, d_hist, _ = jax.lax.fori_loop(0, k, body, state)
+        return sel, jnp.sum(sel >= 0).astype(jnp.int32), d_hist
+
+    return body_fn
+
+
+def _windowed_body(k: int, window: int, eps: float, axis_name: str):
+    """Sliding-window greedy with the candidate axis sharded; mirrors
+    ``windowed._windowed_loop``.
+
+    The eviction Givens rotations read the window factor ``C[:, win]``
+    — w columns scattered across shards — so each step psum-gathers that
+    tiny ``(w, w)`` block first and every device then applies identical
+    rotations to its local rows (and to the gathered block, which tracks
+    the window columns through the loop).
+    """
+    w = min(window, k)
+
+    def body_fn(Vl, maskl):
+        D, Mloc = Vl.shape
+        dtype = Vl.dtype
+        eps2 = jnp.asarray(eps, dtype) ** 2
+        tiny = jnp.asarray(1e-30, dtype)
+        ax = jax.lax.axis_index(axis_name)
+        off = ax.astype(jnp.int32) * Mloc
+
+        diag = jnp.sum(Vl * Vl, axis=0)
+        d2 = jnp.where(maskl, diag, NEG_INF)
+        C = jnp.zeros((w, Mloc), dtype)
+        win = jnp.full((w,), -1, jnp.int32)  # window order: 0 = oldest
+        sel = jnp.full((k,), -1, jnp.int32)
+        d_hist = jnp.zeros((k,), dtype)
+
+        def body(t, state):
+            C, d2, win, sel, d_hist, stopped = state
+            C0, d20, win0 = C, d2, win
+
+            jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
+            stopped = stopped | (dj2 <= eps2)
+            dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+
+            # ---- gather the (w, w) window factor C[:, win] from the
+            # owner shard of each window member (one psum)
+            li = win - off
+            owned = (win >= 0) & (li >= 0) & (li < Mloc)
+            cols = jnp.take(C, jnp.clip(li, 0, Mloc - 1), axis=1)  # (w, w)
+            Cw = jax.lax.psum(
+                jnp.where(owned[None, :], cols, jnp.zeros_like(cols)), axis_name
+            )
+
+            # ---- evict the oldest window item (window full only): the
+            # same first-row Cholesky downdate as the single-device path,
+            # with rotation coefficients read from the replicated Cw
+            full = jnp.logical_and(t >= w, jnp.logical_not(stopped))
+            u = jnp.where(full, C[0], jnp.zeros((Mloc,), dtype))
+            u_w = jnp.where(full, Cw[0], jnp.zeros((w,), dtype))
+            win_shift = jnp.roll(win, -1)
+
+            def rot(r, carry):
+                C, u, Cw, u_w = carry
+                read = jnp.where(full, r + 1, r)
+                row = jax.lax.dynamic_slice(C, (read, 0), (1, Mloc))[0]
+                row_w = jax.lax.dynamic_slice(Cw, (read, 0), (1, w))[0]
+                a = row_w[r + 1]  # = C[read, win_shift[r]] when full
+                b = u_w[r + 1]
+                rho = jnp.maximum(jnp.sqrt(a * a + b * b), tiny)
+                cos = jnp.where(full, a / rho, 1.0)
+                sin = jnp.where(full, b / rho, 0.0)
+                new_row = cos * row + sin * u
+                new_row_w = cos * row_w + sin * u_w
+                u = cos * u - sin * row
+                u_w = cos * u_w - sin * row_w
+                C = jax.lax.dynamic_update_slice(C, new_row[None], (r, 0))
+                Cw = jax.lax.dynamic_update_slice(Cw, new_row_w[None], (r, 0))
+                return C, u, Cw, u_w
+
+            C, u, _, _ = jax.lax.fori_loop(0, w - 1, rot, (C, u, Cw, u_w))
+            C = jnp.where(full, C.at[w - 1].set(0.0), C)
+            d2 = jnp.where(full, d2 + u * u, d2)
+            win = jnp.where(full, win_shift.at[w - 1].set(-1), win)
+
+            # ---- append j against the post-eviction window: broadcast
+            # V[:, j], the post-eviction c_j and the repaired d2[j]
+            z = _bcast_from_owner(
+                (Vl[:, jl], C[:, jl], d2[jl]), owner, axis_name
+            )
+            vj, cj, d2j = z[:D], z[D : D + w], z[D + w]
+            djp = jnp.sqrt(jnp.maximum(d2j, eps2))
+            e = (vj @ Vl - cj @ C) / djp
+            pos = jnp.minimum(t, w - 1)
+            C_next = jax.lax.dynamic_update_slice(C, e[None], (pos, 0))
+            d2_next = d2 - e * e
+            d2_next = d2_next.at[jl].set(jnp.where(owner, NEG_INF, d2_next[jl]))
+            win_next = win.at[pos].set(j)
+
+            C = jnp.where(stopped, C0, C_next)
+            d2 = jnp.where(stopped, d20, d2_next)
+            win = jnp.where(stopped, win0, win_next)
+            sel = sel.at[t].set(jnp.where(stopped, -1, j))
+            d_hist = d_hist.at[t].set(jnp.where(stopped, 0.0, dj))
+            return C, d2, win, sel, d_hist, stopped
+
+        state = (C, d2, win, sel, d_hist, jnp.asarray(False))
+        _, _, _, sel, d_hist, _ = jax.lax.fori_loop(0, k, body, state)
+        return sel, jnp.sum(sel >= 0).astype(jnp.int32), d_hist
+
+    return body_fn
+
+
+# Compiled shard_map callables, keyed by (mesh, axis_name, static args).
+# jax meshes hash by device assignment, so reuse across calls is exact
+# and jit handles per-shape retracing underneath; the cache is bounded
+# so long-lived servers sweeping k/window/eps don't grow it forever.
+@functools.lru_cache(maxsize=64)
+def _greedy_fn(mesh, axis_name: str, k: int, window: Optional[int], eps: float):
+    if window is None:
+        body = _exact_body(k, eps, axis_name)
+    else:
+        body = _windowed_body(k, window, eps, axis_name)
+    return jax.jit(
+        shard_map_compat(
+            body,
+            mesh=mesh,
+            in_specs=(P(None, axis_name), P(axis_name)),
+            out_specs=(P(), P(), P()),
+        )
+    )
+
+
+def dpp_greedy_sharded(
+    V: jnp.ndarray,
+    k: int,
+    *,
+    mesh,
+    axis_name: str = "data",
+    window: Optional[int] = None,
+    eps: float = 1e-6,
+    mask: Optional[jnp.ndarray] = None,
+) -> GreedyResult:
+    """Greedy DPP MAP with the candidate axis of ``V (D, M)`` sharded.
+
+    Selects the same slate — identical indices, d_hist equal to ~1 ulp
+    — as ``dpp_greedy_lowrank`` (``window=None`` / ``>= k``) or
+    ``dpp_greedy_windowed_lowrank`` (smaller windows) on the gathered
+    ``V``, but each device's compute only touches its ``(D, M/P)``
+    shard where ``P = mesh.shape[axis_name]``.  ``M`` is zero-padded
+    (mask False) up to a multiple of ``P``; padding can never be
+    selected.
+
+    The index-for-index match holds while marginal gains sit above the
+    float32 cancellation-noise floor; past the kernel's numerical rank
+    (``k`` beyond ~``D`` selections) the argmax runs on rounding noise
+    on any backend — set ``eps`` to stop there (paper eq. 20), as the
+    single-device paths also should.
+
+    Single-problem only: batching over users composes at the caller
+    (see ROADMAP — sharded x ``rerank_batch`` composition).
+    """
+    if V.ndim != 2:
+        raise ValueError(
+            "dpp_greedy_sharded takes a single problem V (D, M); the user "
+            "batch composes at the caller (ROADMAP: sharded rerank_batch)"
+        )
+    if k <= 0:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if window is not None and window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    nshards = _mesh_axis_size(mesh, axis_name)
+    _, M = V.shape
+    if mask is None:
+        mask = jnp.ones((M,), bool)
+    Mp = -(-M // nshards) * nshards
+    if Mp != M:
+        V = jnp.pad(V, ((0, 0), (0, Mp - M)))
+        mask = jnp.pad(mask, (0, Mp - M), constant_values=False)
+    window_eff = window if (window is not None and window < k) else None
+    fn = _greedy_fn(mesh, axis_name, k, window_eff, float(eps))
+    sel, n, d_hist = fn(V, mask)
+    return GreedyResult(sel, n, d_hist)
+
+
+@functools.lru_cache(maxsize=64)
+def _topk_fn(mesh, axis_name: str, c: int):
+    def body(s):
+        Mloc = s.shape[0]
+        off = jax.lax.axis_index(axis_name).astype(jnp.int32) * Mloc
+        cl = min(c, Mloc)
+        v, i = jax.lax.top_k(s, cl)
+        av = jax.lax.all_gather(v, axis_name).reshape(-1)
+        ai = jax.lax.all_gather(i.astype(jnp.int32) + off, axis_name).reshape(-1)
+        vv, pp = jax.lax.top_k(av, c)
+        return vv, ai[pp]
+
+    return jax.jit(
+        shard_map_compat(
+            body,
+            mesh=mesh,
+            in_specs=(P(axis_name),),
+            out_specs=(P(), P()),
+        )
+    )
+
+
+def sharded_topk(scores: jnp.ndarray, c: int, *, mesh, axis_name: str = "data"):
+    """Global top-c of a candidate-sharded score vector ``scores (M,)``.
+
+    Each shard takes a local top-``min(c, M/P)``, one all-gather merges
+    the survivors, and a tiny replicated ``top_k`` finishes — the
+    sharded replacement for a single-device ``jax.lax.top_k`` shortlist.
+    Returns ``(values (c,), global indices (c,) int32)`` with the same
+    value order and lowest-index tie-breaking as ``jax.lax.top_k`` on
+    the gathered vector.
+    """
+    if scores.ndim != 1:
+        raise ValueError("sharded_topk takes a single score vector (M,)")
+    nshards = _mesh_axis_size(mesh, axis_name)
+    (M,) = scores.shape
+    c = min(c, M)
+    if c <= 0:
+        raise ValueError(f"c must be >= 1, got {c}")
+    Mp = -(-M // nshards) * nshards
+    if Mp != M:
+        scores = jnp.pad(scores, (0, Mp - M), constant_values=NEG_INF)
+    return _topk_fn(mesh, axis_name, c)(scores)

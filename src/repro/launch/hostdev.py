@@ -1,0 +1,16 @@
+"""Forcing the host (CPU) device count — kept jax-import-free.
+
+XLA pins the host device count at first jax init, so the flag must be
+in the environment before any jax import: set it in a parent process's
+subprocess env, or at the very top of a ``main()`` whose module never
+imports jax at module level (the ``repro.launch.dryrun`` contract).
+"""
+from __future__ import annotations
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_flags(flags: str, devices: int) -> str:
+    """Return ``flags`` with any existing device-count flag replaced."""
+    kept = [f for f in flags.split() if not f.startswith(_FLAG)]
+    return " ".join(kept + [f"{_FLAG}={devices}"])

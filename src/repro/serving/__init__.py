@@ -1,1 +1,2 @@
 from repro.serving.reranker import DPPRerankConfig, rerank, rerank_batch
+from repro.serving.sharded_rerank import sharded_rerank

@@ -1,4 +1,4 @@
-"""DPP slate re-ranking as a first-class serving stage (DESIGN.md §2, §5).
+"""DPP slate re-ranking as a first-class serving stage.
 
 Any scorer that yields ``(relevance scores, item feature vectors)`` can be
 diversified: shortlist the top-C candidates, build the implicit DPP
@@ -14,6 +14,13 @@ All greedy variants are reached through ``repro.core.greedy_map``:
   (the NeurIPS'18 sliding-window variant, O(w M) per step) so the
   serving path can produce long diversified feeds — slates longer than
   the kernel rank keep selecting instead of eps-stopping.
+* ``mesh=`` (with ``axis_name=``) shards the candidate axis over a
+  device mesh and delegates to ``repro.serving.sharded_rerank`` — one
+  slate drawn from a candidate set far larger than a single device
+  holds, with a sharded top-k shortlist instead of ``jax.lax.top_k``.
+* ``mask=`` excludes candidates (already-seen / business-filtered
+  items) before the shortlist and inside greedy selection; a masked
+  item can never appear in the slate.
 """
 from __future__ import annotations
 
@@ -35,34 +42,90 @@ class DPPRerankConfig:
     eps: float = 1e-3
     use_kernel: bool = False  # Pallas path (interpret on CPU)
     window: Optional[int] = None  # sliding diversity window (None = exact)
+    mesh: Optional[object] = None  # shard the candidate axis over this mesh
+    axis_name: str = "data"  # mesh axis carrying the candidate shards
+
+    def __post_init__(self):
+        if self.mesh is not None and self.use_kernel:
+            raise ValueError(
+                "use_kernel (Pallas) and mesh (sharded) are mutually "
+                "exclusive rerank backends"
+            )
 
     def greedy_spec(self) -> GreedySpec:
+        if self.mesh is not None:
+            backend = "sharded"
+        elif self.use_kernel:
+            backend = "pallas"
+        else:
+            backend = "jnp"
         return GreedySpec(
             k=self.slate_size,
             window=self.window,
-            backend="pallas" if self.use_kernel else "jnp",
+            backend=backend,
             eps=self.eps,
+            mesh=self.mesh,
+            axis_name=self.axis_name,
         )
 
 
-def rerank(scores: jnp.ndarray, feats: jnp.ndarray, cfg: DPPRerankConfig):
+def rerank(
+    scores: jnp.ndarray,
+    feats: jnp.ndarray,
+    cfg: DPPRerankConfig,
+    mask: Optional[jnp.ndarray] = None,
+):
     """scores (M,), feats (M, D) l2-normalized rows -> slate (N,) global ids.
 
     Returns (indices (N,) int32 into the original M, d_hist (N,)).
+    ``mask`` (M,) bool marks selectable candidates — False entries
+    (already-seen / filtered items) are pushed out of the shortlist and
+    excluded from greedy selection.  With ``cfg.mesh`` set the candidate
+    axis is sharded (see ``repro.serving.sharded_rerank``).
     """
+    if cfg.mesh is not None:
+        from repro.serving.sharded_rerank import sharded_rerank
+
+        return sharded_rerank(scores, feats, cfg, mask=mask)
     C = min(cfg.shortlist, scores.shape[0])
-    top_s, top_i = jax.lax.top_k(scores, C)
+    s = scores if mask is None else jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    top_s, top_i = jax.lax.top_k(s, C)
     f = feats[top_i]  # (C, D)
-    V = (f * map_relevance(top_s.astype(jnp.float32), cfg.alpha)[:, None]).T  # (D, C)
-    res = greedy_map(cfg.greedy_spec(), V=V)
+    rel = map_relevance(top_s.astype(jnp.float32), cfg.alpha)
+    m_top = None if mask is None else mask[top_i]
+    if m_top is not None:
+        # the sentinel score only exists to rank masked items last; keep
+        # it out of the kernel (alpha < 1 maps it to inf) — masked
+        # columns are zeroed and excluded from selection by the mask
+        rel = jnp.where(m_top, rel, 0.0)
+    V = (f * rel[:, None]).T  # (D, C)
+    res = greedy_map(cfg.greedy_spec(), V=V, mask=m_top)
     sel, dh = res.indices, res.d_hist
     out = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
     return out.astype(jnp.int32), dh
 
 
-def rerank_batch(scores: jnp.ndarray, feats: jnp.ndarray, cfg: DPPRerankConfig):
-    """scores (B, M), feats (B, M, D) or shared (M, D)."""
-    if feats.ndim == 2:
-        fn = lambda s: rerank(s, feats, cfg)
-        return jax.vmap(fn)(scores)
-    return jax.vmap(lambda s, f: rerank(s, f, cfg))(scores, feats)
+def rerank_batch(
+    scores: jnp.ndarray,
+    feats: jnp.ndarray,
+    cfg: DPPRerankConfig,
+    mask: Optional[jnp.ndarray] = None,
+):
+    """scores (B, M), feats (B, M, D) or shared (M, D), mask (B, M) or None.
+
+    The sharded backend is single-slate (the candidate axis owns the
+    mesh); compose user batching at the caller — see ROADMAP.
+    """
+    if cfg.mesh is not None:
+        raise ValueError(
+            "sharded rerank is single-slate; call rerank() per user "
+            "(sharded x user-batch composition is on the ROADMAP)"
+        )
+    f_ax = 0 if feats.ndim == 3 else None
+    if mask is None:  # keep the unmasked hot path free of mask plumbing
+        return jax.vmap(lambda s, f: rerank(s, f, cfg), in_axes=(0, f_ax))(
+            scores, feats
+        )
+    return jax.vmap(
+        lambda s, f, m: rerank(s, f, cfg, mask=m), in_axes=(0, f_ax, 0)
+    )(scores, feats, mask)

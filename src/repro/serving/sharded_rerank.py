@@ -1,0 +1,75 @@
+"""Sharded candidate-axis DPP rerank — one slate over millions of candidates.
+
+Same contract as ``repro.serving.reranker.rerank`` but the candidate
+axis M is sharded over ``cfg.mesh``'s ``cfg.axis_name``:
+
+* the top-C shortlist is a **sharded top-k** (local top-k per shard,
+  one small all-gather merge) that produces a selectable *mask* over
+  the full candidate axis — features are never gathered into a dense
+  (C, D) shortlist in shortlist order;
+* greedy MAP runs through ``repro.core.sharded.dpp_greedy_sharded``:
+  each device computes on only its (D, M/P) column shard of the scaled
+  feature matrix ``V`` and its slice of the Cholesky ring state, with
+  one tiny argmax-allreduce + winner-broadcast per step.
+
+The host-side front end still assembles the full (D, M) ``V`` once
+before resharding (fine for host-memory-sized M; per-shard feature
+feeds are a ROADMAP item) — the O(M)-per-device scaling claim is about
+the per-step compute and device state, not host staging memory.
+
+The returned indices are global ids into the original M, identical to
+what the single-device ``rerank`` would select on the same inputs
+(same argmax sequence; see ``repro.core.sharded``) — up to argmax ties
+between *exactly* float-equal marginal gains of distinct items, where
+the single-device path breaks by score-sorted shortlist position and
+this path by lowest global index (measure-zero on continuous scores).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.kernel_matrix import map_relevance
+from repro.core.sharded import dpp_greedy_sharded, sharded_topk
+
+
+def sharded_rerank(
+    scores: jnp.ndarray,
+    feats: jnp.ndarray,
+    cfg,
+    mask: Optional[jnp.ndarray] = None,
+):
+    """scores (M,), feats (M, D) -> (slate (N,) int32 global ids, d_hist (N,)).
+
+    ``cfg`` is a ``DPPRerankConfig`` with ``mesh`` set; ``mask`` (M,)
+    bool excludes candidates from both the shortlist and the slate.
+    """
+    if cfg.mesh is None:
+        raise ValueError("sharded_rerank needs cfg.mesh (see DPPRerankConfig)")
+    if scores.ndim != 1:
+        raise ValueError(
+            "sharded_rerank takes a single request (scores (M,)); user "
+            "batching composes at the caller (see ROADMAP)"
+        )
+    M = scores.shape[0]
+    C = min(cfg.shortlist, M)
+    smask = mask
+    if C < M:
+        s = scores if mask is None else jnp.where(
+            mask, scores, jnp.finfo(scores.dtype).min
+        )
+        _, top_i = sharded_topk(s, C, mesh=cfg.mesh, axis_name=cfg.axis_name)
+        shortlisted = jnp.zeros((M,), bool).at[top_i].set(True)
+        smask = shortlisted if mask is None else shortlisted & mask
+    V = (feats * map_relevance(scores.astype(jnp.float32), cfg.alpha)[:, None]).T
+    res = dpp_greedy_sharded(
+        V,
+        cfg.slate_size,
+        mesh=cfg.mesh,
+        axis_name=cfg.axis_name,
+        window=cfg.window,
+        eps=cfg.eps,
+        mask=smask,
+    )
+    return res.indices.astype(jnp.int32), res.d_hist
