@@ -3,8 +3,11 @@
 Fixes the per-device shard size M/P and grows the candidate set M with
 the device count P.  The claim under test is the sharded subsystem's
 per-step structure: O(w M / P) local work plus one tiny
-argmax-allreduce and one winner-broadcast — so ``us_per_step`` stays
-roughly flat as M grows with M/P fixed.  (On a host-device CPU mesh the
+argmax-allreduce and one winner-broadcast — so ``us_per_user_step``
+stays roughly flat as M grows with M/P fixed.  Each (mode, P) cell also
+gets a B>1 row: a user batch sharing the mesh (loop state (B, Mloc) per
+device, collectives batched over B), whose per-user cost should sit
+well below B x the single-slate row.  (On a host-device CPU mesh the
 "devices" share the same cores, so flatness is approximate there; the
 CSV is evidence of the scaling structure, a real multi-chip mesh is
 where the wall-clock win lands.)
@@ -42,26 +45,34 @@ def _inner(args) -> None:
     M = args.mloc * P
     mesh = make_mesh_compat((P,), ("data",))
     rng = np.random.default_rng(0)
-    V = jnp.asarray(rng.normal(size=(args.dim, M)), jnp.float32) / np.sqrt(args.dim)
+    Vb = jnp.asarray(
+        rng.normal(size=(args.batch, args.dim, M)), jnp.float32
+    ) / np.sqrt(args.dim)
 
+    # B=1 single-slate rows plus a B>1 batched row per mode: the batched
+    # rows measure the users x candidates composition — B slates share
+    # the mesh, per-step collectives batch over B, so us_per_user_step
+    # should sit well below B x the single-slate cost
     for label, window in (("exact", None), (f"w{args.window}", args.window)):
-        fn = lambda: dpp_greedy_sharded(
-            V, args.slate, mesh=mesh, window=window, eps=1e-6
-        )
-        fn().indices.block_until_ready()  # compile + warm
-        best = float("inf")
-        for _ in range(args.trials):
-            t0 = time.perf_counter()
-            fn().indices.block_until_ready()
-            best = min(best, time.perf_counter() - t0)
-        print(
-            f"fig5_sharded_{label}_P{P}_M{M},{best*1e6:.1f},"
-            f"us_per_step={best/args.slate*1e6:.2f};Mloc={args.mloc};"
-            f"D={args.dim};N={args.slate}"
-        )
+        for B in sorted({1, args.batch}):
+            V = Vb[0] if B == 1 else Vb[:B]
+            fn = lambda: dpp_greedy_sharded(
+                V, args.slate, mesh=mesh, window=window, eps=1e-6
+            )
+            fn().indices.block_until_ready()  # compile + warm
+            best = float("inf")
+            for _ in range(args.trials):
+                t0 = time.perf_counter()
+                fn().indices.block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            print(
+                f"fig5_sharded_{label}_B{B}_P{P}_M{M},{best*1e6:.1f},"
+                f"us_per_user_step={best/(args.slate*B)*1e6:.2f};"
+                f"B={B};Mloc={args.mloc};D={args.dim};N={args.slate}"
+            )
 
 
-def run(devices, mloc, dim, slate, window, trials):
+def run(devices, mloc, dim, slate, window, trials, batch):
     rows, failures = [], []
     for P in devices:
         env = dict(os.environ)
@@ -74,6 +85,7 @@ def run(devices, mloc, dim, slate, window, trials):
             sys.executable, "-m", "benchmarks.fig5_sharded", "--inner",
             "--mloc", str(mloc), "--dim", str(dim), "--slate", str(slate),
             "--window", str(window), "--trials", str(trials),
+            "--batch", str(batch),
         ]
         out = subprocess.run(
             cmd, capture_output=True, text=True, env=env, cwd=REPO, timeout=1200
@@ -95,9 +107,10 @@ def run(devices, mloc, dim, slate, window, trials):
 
 _PRESETS = {
     # fast: tiny shapes + 1/2 devices (CI smoke / benchmarks.run default)
-    True: dict(devices=(1, 2), mloc=2048, dim=24, slate=8, window=4, trials=2),
+    True: dict(devices=(1, 2), mloc=2048, dim=24, slate=8, window=4, trials=2,
+               batch=4),
     False: dict(devices=(1, 2, 4, 8), mloc=65536, dim=32, slate=32, window=8,
-                trials=3),
+                trials=3, batch=8),
 }
 
 
@@ -106,7 +119,7 @@ def main(fast_mode: bool = True, **overrides):
     cfg.update({k: v for k, v in overrides.items() if v is not None})
     print("name,us_per_call,derived")
     return run(cfg["devices"], cfg["mloc"], cfg["dim"], cfg["slate"],
-               cfg["window"], cfg["trials"])
+               cfg["window"], cfg["trials"], cfg["batch"])
 
 
 if __name__ == "__main__":
@@ -122,13 +135,18 @@ if __name__ == "__main__":
     ap.add_argument("--slate", type=int, default=None)
     ap.add_argument("--window", type=int, default=None)
     ap.add_argument("--trials", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="user-batch B for the B>1 rows (1 = single-slate only)")
     args = ap.parse_args()
     fast = args.smoke or not args.full
-    for k, v in _PRESETS[fast].items():
-        if k != "devices" and getattr(args, k, None) is None:
-            setattr(args, k, v)
     if args.inner:
+        # the outer sweep passes every shape flag explicitly; direct
+        # --inner invocations fall back to the preset here (main() owns
+        # the preset merge for the outer path)
+        for k, v in _PRESETS[fast].items():
+            if k != "devices" and getattr(args, k, None) is None:
+                setattr(args, k, v)
         _inner(args)
     else:
         main(fast_mode=fast, mloc=args.mloc, dim=args.dim, slate=args.slate,
-             window=args.window, trials=args.trials)
+             window=args.window, trials=args.trials, batch=args.batch)

@@ -19,9 +19,9 @@ Dispatch rules:
 * ``spec.backend`` — "jnp" lowers through XLA; "pallas" routes low-rank
   inputs through the TPU kernel (interpret-mode on CPU; dense inputs
   are rejected — the kernel never materializes L); "sharded" shards the
-  candidate axis M over ``spec.mesh``'s ``spec.axis_name`` (low-rank,
-  single-problem); "auto" picks "sharded" when a mesh is set, else
-  "jnp".
+  candidate axis M over ``spec.mesh``'s ``spec.axis_name`` (low-rank;
+  batched V runs all B users on the mesh at once); "auto" picks
+  "sharded" when a mesh is set, else "jnp".
 
 ``GreedySpec`` validates itself at construction — a bad config raises
 ``GreedySpecError`` (a ``ValueError``) at spec-build time instead of
@@ -106,7 +106,13 @@ def greedy_map(
     Accepts single problems (L (M, M) / V (D, M)) and user batches
     (L (B, M, M) / V (B, D, M)); returns a ``GreedyResult`` whose leaves
     gain a leading batch dimension in the batched case.  The sharded
-    backend is single-problem, low-rank only.
+    backend is low-rank only; batched inputs keep the candidate axis
+    sharded and run all B users on the mesh at once.
+
+    ``mask`` may be per-problem ((M,) single / (B, M) batched) or — a
+    shared candidate filter applied to every user of a batch — a single
+    (M,) vector alongside a batched L/V; it is broadcast to (B, M)
+    before dispatch so every backend sees the same per-user shape.
     """
     if (L is None) == (V is None):
         raise ValueError("pass exactly one of L= (dense) or V= (low-rank)")
@@ -116,16 +122,18 @@ def greedy_map(
             "materializes the dense L"
         )
 
+    kern = L if L is not None else V
+    if mask is not None and kern.ndim == 3 and mask.ndim == 1:
+        # shared (M,) mask with a batched kernel: every backend's batch
+        # path consumes a (B, M) mask (the jnp paths vmap over it, the
+        # pallas kernel reshapes to (B, 1, M)), so broadcast here once
+        mask = jnp.broadcast_to(mask, (kern.shape[0], mask.shape[0]))
+
     if spec.sharded():
         if L is not None:
             raise ValueError(
                 "backend='sharded' needs the low-rank V — a dense L cannot "
                 "be candidate-sharded"
-            )
-        if V.ndim == 3:
-            raise ValueError(
-                "backend='sharded' reranks one slate at a time (V (D, M)); "
-                "compose the user batch at the caller (see ROADMAP)"
             )
         from repro.core.sharded import dpp_greedy_sharded
 

@@ -12,6 +12,13 @@ slice of the ``c``/``d2`` Cholesky state — the dense ``(M, M)`` kernel
 the full ``(D, M)`` ``V`` on the host before resharding; feeding the
 shards straight from a sharded feature store is a ROADMAP item.)
 
+A request batch of B users shares the mesh: ``V (B, D, M)`` keeps the
+candidate axis sharded (every device holds a ``(B, D, M/P)`` block) and
+the per-slate SPMD body is ``vmap``-ed *inside* the ``shard_map``, so
+the loop state becomes ``(B, Mloc)`` per device and each step's argmax
+allreduce and winner broadcast move ``B`` values in one batched
+collective instead of ``B`` sequential ones.
+
 Per greedy step, inside one ``shard_map``:
 
 1. **local update** — each device updates its candidate shard
@@ -238,16 +245,26 @@ def _windowed_body(k: int, window: int, eps: float, axis_name: str):
 # and jit handles per-shape retracing underneath; the cache is bounded
 # so long-lived servers sweeping k/window/eps don't grow it forever.
 @functools.lru_cache(maxsize=64)
-def _greedy_fn(mesh, axis_name: str, k: int, window: Optional[int], eps: float):
+def _greedy_fn(
+    mesh, axis_name: str, k: int, window: Optional[int], eps: float,
+    batched: bool = False,
+):
     if window is None:
         body = _exact_body(k, eps, axis_name)
     else:
         body = _windowed_body(k, window, eps, axis_name)
+    if batched:
+        # vmap inside shard_map: every device runs all B users on its
+        # (B, D, Mloc) block and the per-step collectives batch over B
+        body = jax.vmap(body)
+        in_specs = (P(None, None, axis_name), P(None, axis_name))
+    else:
+        in_specs = (P(None, axis_name), P(axis_name))
     return jax.jit(
         shard_map_compat(
             body,
             mesh=mesh,
-            in_specs=(P(None, axis_name), P(axis_name)),
+            in_specs=in_specs,
             out_specs=(P(), P(), P()),
         )
     )
@@ -263,12 +280,16 @@ def dpp_greedy_sharded(
     eps: float = 1e-6,
     mask: Optional[jnp.ndarray] = None,
 ) -> GreedyResult:
-    """Greedy DPP MAP with the candidate axis of ``V (D, M)`` sharded.
+    """Greedy DPP MAP with the candidate axis of ``V`` sharded.
 
-    Selects the same slate — identical indices, d_hist equal to ~1 ulp
-    — as ``dpp_greedy_lowrank`` (``window=None`` / ``>= k``) or
-    ``dpp_greedy_windowed_lowrank`` (smaller windows) on the gathered
-    ``V``, but each device's compute only touches its ``(D, M/P)``
+    ``V`` is a single problem ``(D, M)`` or a user batch ``(B, D, M)``;
+    ``mask`` is ``(M,)``, ``(B, M)``, or — batched with a shared
+    candidate filter — ``(M,)`` broadcast over B.  Selects the same
+    slate(s) — identical indices, d_hist equal to ~1 ulp — as
+    ``dpp_greedy_lowrank`` (``window=None`` / ``>= k``) or
+    ``dpp_greedy_windowed_lowrank`` (smaller windows), respectively
+    their ``_batch`` vmap variants, on the gathered ``V``; but each
+    device's compute only touches its ``(D, M/P)`` (or ``(B, D, M/P)``)
     shard where ``P = mesh.shape[axis_name]``.  ``M`` is zero-padded
     (mask False) up to a multiple of ``P``; padding can never be
     selected.
@@ -278,35 +299,37 @@ def dpp_greedy_sharded(
     (``k`` beyond ~``D`` selections) the argmax runs on rounding noise
     on any backend — set ``eps`` to stop there (paper eq. 20), as the
     single-device paths also should.
-
-    Single-problem only: batching over users composes at the caller
-    (see ROADMAP — sharded x ``rerank_batch`` composition).
     """
-    if V.ndim != 2:
+    if V.ndim not in (2, 3):
         raise ValueError(
-            "dpp_greedy_sharded takes a single problem V (D, M); the user "
-            "batch composes at the caller (ROADMAP: sharded rerank_batch)"
+            f"dpp_greedy_sharded takes V (D, M) or a user batch (B, D, M), "
+            f"got ndim={V.ndim}"
         )
     if k <= 0:
         raise ValueError(f"k must be >= 1, got {k}")
     if window is not None and window < 1:
         raise ValueError(f"window must be >= 1, got {window}")
+    batched = V.ndim == 3
     nshards = _mesh_axis_size(mesh, axis_name)
-    _, M = V.shape
+    M = V.shape[-1]
+    mask_shape = (V.shape[0], M) if batched else (M,)
     if mask is None:
-        mask = jnp.ones((M,), bool)
+        mask = jnp.ones(mask_shape, bool)
+    elif mask.shape != mask_shape:
+        mask = jnp.broadcast_to(mask, mask_shape)
     Mp = -(-M // nshards) * nshards
     if Mp != M:
-        V = jnp.pad(V, ((0, 0), (0, Mp - M)))
-        mask = jnp.pad(mask, (0, Mp - M), constant_values=False)
+        pad = [(0, 0)] * (V.ndim - 1) + [(0, Mp - M)]
+        V = jnp.pad(V, pad)
+        mask = jnp.pad(mask, pad[1:], constant_values=False)
     window_eff = window if (window is not None and window < k) else None
-    fn = _greedy_fn(mesh, axis_name, k, window_eff, float(eps))
+    fn = _greedy_fn(mesh, axis_name, k, window_eff, float(eps), batched)
     sel, n, d_hist = fn(V, mask)
     return GreedyResult(sel, n, d_hist)
 
 
 @functools.lru_cache(maxsize=64)
-def _topk_fn(mesh, axis_name: str, c: int):
+def _topk_fn(mesh, axis_name: str, c: int, batched: bool = False):
     def body(s):
         Mloc = s.shape[0]
         off = jax.lax.axis_index(axis_name).astype(jnp.int32) * Mloc
@@ -317,34 +340,45 @@ def _topk_fn(mesh, axis_name: str, c: int):
         vv, pp = jax.lax.top_k(av, c)
         return vv, ai[pp]
 
+    if batched:
+        body = jax.vmap(body)
+        in_specs = (P(None, axis_name),)
+    else:
+        in_specs = (P(axis_name),)
     return jax.jit(
         shard_map_compat(
             body,
             mesh=mesh,
-            in_specs=(P(axis_name),),
+            in_specs=in_specs,
             out_specs=(P(), P()),
         )
     )
 
 
 def sharded_topk(scores: jnp.ndarray, c: int, *, mesh, axis_name: str = "data"):
-    """Global top-c of a candidate-sharded score vector ``scores (M,)``.
+    """Global top-c of a candidate-sharded score vector ``scores (M,)``
+    or score batch ``(B, M)``.
 
     Each shard takes a local top-``min(c, M/P)``, one all-gather merges
     the survivors, and a tiny replicated ``top_k`` finishes — the
     sharded replacement for a single-device ``jax.lax.top_k`` shortlist.
-    Returns ``(values (c,), global indices (c,) int32)`` with the same
-    value order and lowest-index tie-breaking as ``jax.lax.top_k`` on
-    the gathered vector.
+    Returns ``(values (c,), global indices (c,) int32)`` — leading B
+    axis when batched — with the same value order and lowest-index
+    tie-breaking as ``jax.lax.top_k`` on the gathered vector(s).
     """
-    if scores.ndim != 1:
-        raise ValueError("sharded_topk takes a single score vector (M,)")
+    if scores.ndim not in (1, 2):
+        raise ValueError(
+            f"sharded_topk takes scores (M,) or a batch (B, M), "
+            f"got ndim={scores.ndim}"
+        )
+    batched = scores.ndim == 2
     nshards = _mesh_axis_size(mesh, axis_name)
-    (M,) = scores.shape
+    M = scores.shape[-1]
     c = min(c, M)
     if c <= 0:
         raise ValueError(f"c must be >= 1, got {c}")
     Mp = -(-M // nshards) * nshards
     if Mp != M:
-        scores = jnp.pad(scores, (0, Mp - M), constant_values=NEG_INF)
-    return _topk_fn(mesh, axis_name, c)(scores)
+        pad = ((0, 0), (0, Mp - M)) if batched else ((0, Mp - M),)
+        scores = jnp.pad(scores, pad, constant_values=NEG_INF)
+    return _topk_fn(mesh, axis_name, c, batched)(scores)

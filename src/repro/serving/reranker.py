@@ -15,12 +15,20 @@ All greedy variants are reached through ``repro.core.greedy_map``:
   serving path can produce long diversified feeds — slates longer than
   the kernel rank keep selecting instead of eps-stopping.
 * ``mesh=`` (with ``axis_name=``) shards the candidate axis over a
-  device mesh and delegates to ``repro.serving.sharded_rerank`` — one
-  slate drawn from a candidate set far larger than a single device
+  device mesh and delegates to ``repro.serving.sharded_rerank`` —
+  slates drawn from a candidate set far larger than a single device
   holds, with a sharded top-k shortlist instead of ``jax.lax.top_k``.
+  ``rerank_batch`` keeps the candidate axis sharded and runs the whole
+  request batch of B users on the mesh at once (batched shortlist,
+  batched greedy loop state, one batched collective per step).
 * ``mask=`` excludes candidates (already-seen / business-filtered
   items) before the shortlist and inside greedy selection; a masked
   item can never appear in the slate.
+
+``DPPRerankConfig`` validates itself at construction (mirroring
+``GreedySpec``): a nonsensical slate/shortlist/window/eps raises a
+``ValueError`` when the config is built, not as a shape or trace error
+deep inside the jitted serve step.
 """
 from __future__ import annotations
 
@@ -46,6 +54,14 @@ class DPPRerankConfig:
     axis_name: str = "data"  # mesh axis carrying the candidate shards
 
     def __post_init__(self):
+        if self.slate_size <= 0:
+            raise ValueError(f"slate_size must be >= 1, got {self.slate_size}")
+        if self.shortlist <= 0:
+            raise ValueError(f"shortlist must be >= 1, got {self.shortlist}")
+        if self.window is not None and self.window <= 0:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if self.eps < 0:
+            raise ValueError(f"eps must be >= 0, got {self.eps}")
         if self.mesh is not None and self.use_kernel:
             raise ValueError(
                 "use_kernel (Pallas) and mesh (sharded) are mutually "
@@ -86,6 +102,13 @@ def rerank(
     if cfg.mesh is not None:
         from repro.serving.sharded_rerank import sharded_rerank
 
+        # sharded_rerank also serves batches; rerank's contract stays
+        # single-request (batches go through rerank_batch)
+        if scores.ndim != 1:
+            raise ValueError(
+                f"rerank takes a single request (scores (M,)), got "
+                f"ndim={scores.ndim}; use rerank_batch for user batches"
+            )
         return sharded_rerank(scores, feats, cfg, mask=mask)
     C = min(cfg.shortlist, scores.shape[0])
     s = scores if mask is None else jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
@@ -111,16 +134,30 @@ def rerank_batch(
     cfg: DPPRerankConfig,
     mask: Optional[jnp.ndarray] = None,
 ):
-    """scores (B, M), feats (B, M, D) or shared (M, D), mask (B, M) or None.
+    """scores (B, M), feats (B, M, D) or shared (M, D), mask (B, M),
+    shared (M,), or None.
 
-    The sharded backend is single-slate (the candidate axis owns the
-    mesh); compose user batching at the caller — see ROADMAP.
+    Returns (slates (B, N) int32 global ids, d_hist (B, N)).  With
+    ``cfg.mesh`` set the whole request batch shares the mesh: the
+    candidate axis stays sharded, the shortlist is one batched sharded
+    top-k, and the greedy per-step collectives batch over B (see
+    ``repro.serving.sharded_rerank``) — slates are identical index for
+    index to a ``vmap`` of the single-device ``rerank`` on the same
+    inputs.  Without a mesh this is that vmap.
     """
     if cfg.mesh is not None:
-        raise ValueError(
-            "sharded rerank is single-slate; call rerank() per user "
-            "(sharded x user-batch composition is on the ROADMAP)"
-        )
+        from repro.serving.sharded_rerank import sharded_rerank
+
+        # sharded_rerank also serves single requests; rerank_batch's
+        # contract stays batched (single requests go through rerank)
+        if scores.ndim != 2:
+            raise ValueError(
+                f"rerank_batch takes a user batch (scores (B, M)), got "
+                f"ndim={scores.ndim}; use rerank for a single request"
+            )
+        return sharded_rerank(scores, feats, cfg, mask=mask)
+    if mask is not None and mask.ndim == 1:
+        mask = jnp.broadcast_to(mask, scores.shape)
     f_ax = 0 if feats.ndim == 3 else None
     if mask is None:  # keep the unmasked hot path free of mask plumbing
         return jax.vmap(lambda s, f: rerank(s, f, cfg), in_axes=(0, f_ax))(

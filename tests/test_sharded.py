@@ -93,6 +93,28 @@ def test_rerank_config_validation():
     assert spec.backend == "sharded" and spec.mesh is mesh
 
 
+def test_rerank_config_validates_at_construction():
+    """Nonsensical slate/shortlist/window/eps fail when the config is
+    built (mirroring GreedySpecError), not as shape/trace errors inside
+    the jitted serve step."""
+    with pytest.raises(ValueError, match="slate_size must be"):
+        DPPRerankConfig(slate_size=0)
+    with pytest.raises(ValueError, match="slate_size must be"):
+        DPPRerankConfig(slate_size=-5)
+    with pytest.raises(ValueError, match="shortlist must be"):
+        DPPRerankConfig(shortlist=0)
+    with pytest.raises(ValueError, match="shortlist must be"):
+        DPPRerankConfig(shortlist=-1)
+    with pytest.raises(ValueError, match="window must be"):
+        DPPRerankConfig(window=0)
+    with pytest.raises(ValueError, match="window must be"):
+        DPPRerankConfig(window=-2)
+    with pytest.raises(ValueError, match="eps must be"):
+        DPPRerankConfig(eps=-1e-6)
+    # boundary values that must still construct
+    DPPRerankConfig(slate_size=1, shortlist=1, window=1, eps=0.0)
+
+
 # ---------------------------------------------------------------------------
 # Sharded greedy on a 1-device mesh (full code path, in-process)
 # ---------------------------------------------------------------------------
@@ -136,15 +158,14 @@ def test_sharded_mask_and_dispatch():
     assert all(bool(mask[i]) for i in sel if i >= 0)
 
 
-def test_sharded_rejects_dense_and_batched():
+def test_sharded_rejects_dense_and_bad_rank():
     mesh = make_mesh_compat((1,), ("data",))
     spec = GreedySpec(k=4, backend="sharded", mesh=mesh)
     L = jnp.eye(8)
     with pytest.raises(ValueError, match="low-rank V"):
         greedy_map(spec, L=L)
-    Vb = jnp.ones((2, 4, 16))
-    with pytest.raises(ValueError, match="one slate at a time"):
-        greedy_map(spec, V=Vb)
+    with pytest.raises(ValueError, match="ndim"):
+        dpp_greedy_sharded(jnp.ones((2, 2, 4, 16)), 2, mesh=mesh)
     with pytest.raises(ValueError, match="mesh has no axis"):
         dpp_greedy_sharded(jnp.ones((4, 16)), 2, mesh=mesh, axis_name="model")
 
@@ -178,6 +199,196 @@ def test_sharded_rerank_matches_dense_one_device():
                             eps=1e-6, window=window, mesh=mesh),
         )
         np.testing.assert_array_equal(np.asarray(dense), np.asarray(sh))
+
+
+# ---------------------------------------------------------------------------
+# Batched sharded greedy / rerank (users x candidates on one mesh)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_batched_matches_lowrank_batch_one_device():
+    """V (B, D, M): the batched sharded loop (state (B, Mloc) per device,
+    collectives batched over B) matches the vmap single-device path."""
+    from repro.core import dpp_greedy_lowrank_batch
+
+    rng = np.random.default_rng(21)
+    B, D, M, k = 4, 12, 90, 8
+    V = jnp.asarray(rng.normal(size=(B, D, M)), jnp.float32) / np.sqrt(D)
+    mask = jnp.asarray(rng.uniform(size=(B, M)) > 0.3)
+    mesh = make_mesh_compat((1,), ("data",))
+    ref = dpp_greedy_lowrank_batch(V, k, 1e-6, mask)
+    got = dpp_greedy_sharded(V, k, mesh=mesh, eps=1e-6, mask=mask)
+    assert got.indices.shape == (B, k)
+    np.testing.assert_array_equal(np.asarray(ref.indices), np.asarray(got.indices))
+    np.testing.assert_allclose(
+        np.asarray(ref.d_hist), np.asarray(got.d_hist), rtol=1e-6, atol=1e-7
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ref.n_selected), np.asarray(got.n_selected)
+    )
+    # dispatch no longer rejects batched V on the sharded backend
+    via_map = greedy_map(
+        GreedySpec(k=k, backend="sharded", mesh=mesh, eps=1e-6), V=V, mask=mask
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ref.indices), np.asarray(via_map.indices)
+    )
+
+
+def test_sharded_topk_batched_one_device():
+    rng = np.random.default_rng(22)
+    s = jnp.asarray(rng.uniform(size=(3, 97)), jnp.float32)
+    mesh = make_mesh_compat((1,), ("data",))
+    v1, i1 = jax.lax.top_k(s, 13)  # top_k batches over leading axes
+    v2, i2 = sharded_topk(s, 13, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+@pytest.mark.parametrize("window", [None, 3])
+@pytest.mark.parametrize("per_user_feats", [False, True])
+def test_rerank_batch_sharded_matches_vmap_one_device(window, per_user_feats):
+    """rerank_batch with cfg.mesh: identical slates, per user, to the
+    vmap of single-device rerank — shared or per-user features, per-user
+    masks, padded M (not divisible by the axis size)."""
+    rng = np.random.default_rng(23)
+    B, M, D = 4, 121, 8
+    scores = jnp.asarray(rng.uniform(size=(B, M)), jnp.float32)
+    shape = (B, M, D) if per_user_feats else (M, D)
+    feats = rng.normal(size=shape).astype(np.float32)
+    feats /= np.linalg.norm(feats, axis=-1, keepdims=True)
+    feats = jnp.asarray(feats)
+    mask = jnp.asarray(rng.uniform(size=(B, M)) > 0.25)
+    mesh = make_mesh_compat((1,), ("data",))
+    kw = dict(slate_size=6, shortlist=64, alpha=3.0, eps=1e-6, window=window)
+    ref, ref_dh = rerank_batch(scores, feats, DPPRerankConfig(**kw), mask=mask)
+    got, got_dh = rerank_batch(
+        scores, feats, DPPRerankConfig(mesh=mesh, **kw), mask=mask
+    )
+    assert got.shape == (B, 6)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    np.testing.assert_allclose(
+        np.asarray(ref_dh), np.asarray(got_dh), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_rerank_batch_sharded_eps_stop():
+    """Rank-deficient per-user kernels eps-stop at the same step as the
+    vmap single-device path (slots after the stop hold -1)."""
+    rng = np.random.default_rng(24)
+    B, M, D = 4, 80, 3
+    scores = jnp.asarray(rng.uniform(size=(B, M)), jnp.float32)
+    feats = rng.normal(size=(B, M, D)).astype(np.float32)
+    feats /= np.linalg.norm(feats, axis=-1, keepdims=True)
+    feats = jnp.asarray(feats)
+    mesh = make_mesh_compat((1,), ("data",))
+    kw = dict(slate_size=10, shortlist=64, alpha=2.0, eps=1e-2)
+    ref, _ = rerank_batch(scores, feats, DPPRerankConfig(**kw))
+    got, _ = rerank_batch(scores, feats, DPPRerankConfig(mesh=mesh, **kw))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    assert (np.asarray(got) == -1).any()  # the stop actually fired
+
+
+# ---------------------------------------------------------------------------
+# Mask plumbing regressions (shared (M,) mask x batched V; poisoned
+# scores on masked items)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "sharded"])
+def test_shared_mask_batched_V_all_backends(backend):
+    """A shared (M,) mask alongside a batched V (B, D, M) is broadcast to
+    (B, M) in dispatch — regression for the pallas path leaving mb
+    unbatched (mask.reshape(B, 1, M) blew up) and for the jnp/sharded
+    batch paths vmapping a rank-1 mask."""
+    rng = np.random.default_rng(31)
+    B, D, M, k = 3, 10, 72, 6
+    V = jnp.asarray(rng.normal(size=(B, D, M)), jnp.float32) / np.sqrt(D)
+    mask = jnp.asarray(rng.uniform(size=M) > 0.4)  # shared across users
+    kw = dict(k=k, eps=1e-6)
+    if backend == "sharded":
+        kw["mesh"] = make_mesh_compat((1,), ("data",))
+    spec = GreedySpec(backend=backend, **kw)
+    got = greedy_map(spec, V=V, mask=mask)
+    ref = greedy_map(
+        GreedySpec(k=k, backend="jnp", eps=1e-6),
+        V=V,
+        mask=jnp.broadcast_to(mask, (B, M)),
+    )
+    assert got.indices.shape == (B, k)
+    np.testing.assert_array_equal(np.asarray(ref.indices), np.asarray(got.indices))
+    sel = np.asarray(got.indices)
+    assert all(bool(mask[i]) for i in sel.ravel() if i >= 0)
+
+
+@pytest.mark.parametrize("poison", [float("nan"), float("-inf")])
+def test_sharded_rerank_masked_score_poison(poison):
+    """A NaN/-inf score on a *masked* item must not leak into the kernel:
+    V's masked columns are zeroed exactly as the single-device rerank
+    zeroes masked shortlist relevances."""
+    rng = np.random.default_rng(32)
+    M, D = 150, 8
+    scores = rng.uniform(size=M).astype(np.float32)
+    feats = rng.normal(size=(M, D)).astype(np.float32)
+    feats /= np.linalg.norm(feats, axis=1, keepdims=True)
+    mask = np.ones(M, bool)
+    mask[7] = False
+    clean = jnp.asarray(scores)
+    scores = scores.copy()
+    scores[7] = poison
+    mesh = make_mesh_compat((1,), ("data",))
+    cfg = DPPRerankConfig(
+        slate_size=8, shortlist=64, alpha=3.0, eps=1e-6, mesh=mesh
+    )
+    slate, dh = rerank(jnp.asarray(scores), jnp.asarray(feats), cfg,
+                       mask=jnp.asarray(mask))
+    slate, dh = np.asarray(slate), np.asarray(dh)
+    assert (slate >= 0).sum() == 8 and 7 not in slate.tolist()
+    assert np.isfinite(dh).all()
+    # the poisoned-but-masked score changes nothing vs a clean one
+    ref, _ = rerank(clean, jnp.asarray(feats), cfg, mask=jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(ref), slate)
+
+
+def test_sharded_rerank_rejects_rank_inconsistent_inputs():
+    """Single-request rerank with a mesh must not silently return batched
+    slates when feats or mask carry an unexpected batch axis."""
+    rng = np.random.default_rng(34)
+    M, D, B = 64, 6, 3
+    scores = jnp.asarray(rng.uniform(size=M), jnp.float32)
+    feats = jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
+    mesh = make_mesh_compat((1,), ("data",))
+    cfg = DPPRerankConfig(slate_size=4, shortlist=32, mesh=mesh)
+    with pytest.raises(ValueError, match="single request"):
+        rerank(jnp.stack([scores] * B), feats, cfg)
+    with pytest.raises(ValueError, match="feats must be"):
+        rerank(scores, jnp.stack([feats] * B), cfg)
+    with pytest.raises(ValueError, match="mask must be"):
+        rerank(scores, feats, cfg, mask=jnp.ones((B, M), bool))
+    with pytest.raises(ValueError, match="user batch"):
+        rerank_batch(scores, feats, cfg)
+
+
+def test_sharded_rerank_inf_relevance_outside_shortlist():
+    """An unmasked item whose relevance overflows to inf (alpha < 1 with
+    a very negative score) ranks outside the top-C shortlist — the
+    single-device rerank never builds its V column, and the sharded path
+    must likewise zero it rather than let the inf poison the matvec."""
+    rng = np.random.default_rng(33)
+    M, D = 200, 8
+    scores = rng.uniform(size=M).astype(np.float32)
+    scores[11] = -130.0  # 0.5 ** -130 overflows float32 -> inf relevance
+    feats = rng.normal(size=(M, D)).astype(np.float32)
+    feats /= np.linalg.norm(feats, axis=1, keepdims=True)
+    mesh = make_mesh_compat((1,), ("data",))
+    kw = dict(slate_size=8, shortlist=64, alpha=0.5, eps=1e-6)
+    ref, _ = rerank(jnp.asarray(scores), jnp.asarray(feats),
+                    DPPRerankConfig(**kw))
+    got, dh = rerank(jnp.asarray(scores), jnp.asarray(feats),
+                     DPPRerankConfig(mesh=mesh, **kw))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    assert np.isfinite(np.asarray(dh)).all()
+    assert 11 not in np.asarray(got).tolist()
 
 
 # ---------------------------------------------------------------------------
@@ -317,4 +528,54 @@ def test_sharded_rerank_multidevice_serving_parity():
                     window=window, mesh=mesh), mask=m)
                 np.testing.assert_array_equal(np.asarray(dense), np.asarray(sh))
         print("SHARDED-SERVING-OK")
+    """)
+
+
+@pytest.mark.slow
+def test_rerank_batch_sharded_multidevice_parity():
+    """Acceptance bar for the users x candidates composition: on an
+    8-host-device mesh, rerank_batch with cfg.mesh returns slates
+    identical index-for-index (d_hist to ~1 ulp) to vmap of the
+    single-device rerank for B >= 4 users with per-user masks, padded M
+    (not divisible by P), and per-user eps-stop."""
+    run_subprocess("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.distributed.context import make_mesh_compat
+        from repro.serving.reranker import DPPRerankConfig, rerank_batch
+        assert jax.device_count() == 8
+        mesh = make_mesh_compat((8,), ("data",))
+        rng = np.random.default_rng(1)
+        B, M, D = 5, 1501, 12  # M not divisible by 8 (padded shards)
+        scores = jnp.asarray(rng.uniform(size=(B, M)), jnp.float32)
+        feats = rng.normal(size=(M, D)).astype(np.float32)
+        feats /= np.linalg.norm(feats, axis=1, keepdims=True)
+        feats = jnp.asarray(feats)
+        mask = jnp.asarray(rng.uniform(size=(B, M)) > 0.25)
+        for window in (None, 1, 4):
+            for m in (None, mask):
+                kw = dict(slate_size=10, shortlist=400, alpha=3.0,
+                          eps=1e-6, window=window)
+                ref, ref_dh = rerank_batch(
+                    scores, feats, DPPRerankConfig(**kw), mask=m)
+                got, got_dh = rerank_batch(
+                    scores, feats, DPPRerankConfig(mesh=mesh, **kw), mask=m)
+                np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+                np.testing.assert_allclose(
+                    np.asarray(ref_dh), np.asarray(got_dh),
+                    rtol=1e-6, atol=1e-7)
+        # per-user eps-stop: rank-deficient per-user kernels (D=3) halt
+        # at different steps per user; batched sharded must agree
+        Bs, Ms, Ds = 4, 400, 3
+        s2 = jnp.asarray(rng.uniform(size=(Bs, Ms)), jnp.float32)
+        f2 = rng.normal(size=(Bs, Ms, Ds)).astype(np.float32)
+        f2 /= np.linalg.norm(f2, axis=-1, keepdims=True)
+        f2 = jnp.asarray(f2)
+        kw = dict(slate_size=8, shortlist=200, alpha=2.0, eps=1e-2)
+        ref, _ = rerank_batch(s2, f2, DPPRerankConfig(**kw))
+        got, _ = rerank_batch(s2, f2, DPPRerankConfig(mesh=mesh, **kw))
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+        assert (np.asarray(got) == -1).any()
+        print("SHARDED-BATCH-OK")
     """)
