@@ -40,6 +40,7 @@ def _inner(args) -> None:
 
     from repro.core.sharded import dpp_greedy_sharded
     from repro.distributed.context import make_mesh_compat
+    from repro.kernels.dpp_greedy import VMEM_BUDGET_BYTES, untiled_vmem_bytes
 
     P = jax.device_count()
     M = args.mloc * P
@@ -52,27 +53,40 @@ def _inner(args) -> None:
     # B=1 single-slate rows plus a B>1 batched row per mode: the batched
     # rows measure the users x candidates composition — B slates share
     # the mesh, per-step collectives batch over B, so us_per_user_step
-    # should sit well below B x the single-slate cost
+    # should sit well below B x the single-slate cost.  Each cell also
+    # gets a tile_m row (tm<tile> label): the per-device local update
+    # streamed through the tiled Pallas pass — past_gate=1 marks shards
+    # whose (D, Mloc) working set exceeds the resident kernels' VMEM
+    # budget, i.e. the regime the old vmem gate surrendered to jnp.
     for label, window in (("exact", None), (f"w{args.window}", args.window)):
-        for B in sorted({1, args.batch}):
-            V = Vb[0] if B == 1 else Vb[:B]
-            fn = lambda: dpp_greedy_sharded(
-                V, args.slate, mesh=mesh, window=window, eps=1e-6
-            )
-            fn().indices.block_until_ready()  # compile + warm
-            best = float("inf")
-            for _ in range(args.trials):
-                t0 = time.perf_counter()
-                fn().indices.block_until_ready()
-                best = min(best, time.perf_counter() - t0)
-            print(
-                f"fig5_sharded_{label}_B{B}_P{P}_M{M},{best*1e6:.1f},"
-                f"us_per_user_step={best/(args.slate*B)*1e6:.2f};"
-                f"B={B};Mloc={args.mloc};D={args.dim};N={args.slate}"
-            )
+        state_rows = args.slate if window is None else min(window, args.slate)
+        past = int(
+            untiled_vmem_bytes(args.dim, args.mloc, state_rows)
+            > VMEM_BUDGET_BYTES
+        )
+        for tile in (None, args.tile_m):
+            for B in sorted({1, args.batch}):
+                V = Vb[0] if B == 1 else Vb[:B]
+                fn = lambda: dpp_greedy_sharded(
+                    V, args.slate, mesh=mesh, window=window, eps=1e-6,
+                    tile_m=tile,
+                )
+                fn().indices.block_until_ready()  # compile + warm
+                best = float("inf")
+                for _ in range(args.trials):
+                    t0 = time.perf_counter()
+                    fn().indices.block_until_ready()
+                    best = min(best, time.perf_counter() - t0)
+                tl = "" if tile is None else f"_tm{tile}"
+                print(
+                    f"fig5_sharded_{label}{tl}_B{B}_P{P}_M{M},{best*1e6:.1f},"
+                    f"us_per_user_step={best/(args.slate*B)*1e6:.2f};"
+                    f"B={B};Mloc={args.mloc};D={args.dim};N={args.slate};"
+                    f"tile_m={tile or 0};past_gate={past}"
+                )
 
 
-def run(devices, mloc, dim, slate, window, trials, batch):
+def run(devices, mloc, dim, slate, window, trials, batch, tile_m):
     rows, failures = [], []
     for P in devices:
         env = dict(os.environ)
@@ -85,7 +99,7 @@ def run(devices, mloc, dim, slate, window, trials, batch):
             sys.executable, "-m", "benchmarks.fig5_sharded", "--inner",
             "--mloc", str(mloc), "--dim", str(dim), "--slate", str(slate),
             "--window", str(window), "--trials", str(trials),
-            "--batch", str(batch),
+            "--batch", str(batch), "--tile-m", str(tile_m),
         ]
         out = subprocess.run(
             cmd, capture_output=True, text=True, env=env, cwd=REPO, timeout=1200
@@ -108,9 +122,12 @@ def run(devices, mloc, dim, slate, window, trials, batch):
 _PRESETS = {
     # fast: tiny shapes + 1/2 devices (CI smoke / benchmarks.run default)
     True: dict(devices=(1, 2), mloc=2048, dim=24, slate=8, window=4, trials=2,
-               batch=4),
+               batch=4, tile_m=512),
+    # full: Mloc=65536 at D=32 puts the per-device shard past the
+    # resident kernels' VMEM budget (past_gate=1 rows) — the regime the
+    # tiled local update exists for
     False: dict(devices=(1, 2, 4, 8), mloc=65536, dim=32, slate=32, window=8,
-                trials=3, batch=8),
+                trials=3, batch=8, tile_m=8192),
 }
 
 
@@ -119,7 +136,7 @@ def main(fast_mode: bool = True, **overrides):
     cfg.update({k: v for k, v in overrides.items() if v is not None})
     print("name,us_per_call,derived")
     return run(cfg["devices"], cfg["mloc"], cfg["dim"], cfg["slate"],
-               cfg["window"], cfg["trials"], cfg["batch"])
+               cfg["window"], cfg["trials"], cfg["batch"], cfg["tile_m"])
 
 
 if __name__ == "__main__":
@@ -137,6 +154,8 @@ if __name__ == "__main__":
     ap.add_argument("--trials", type=int, default=None)
     ap.add_argument("--batch", type=int, default=None,
                     help="user-batch B for the B>1 rows (1 = single-slate only)")
+    ap.add_argument("--tile-m", type=int, default=None, dest="tile_m",
+                    help="tile for the Pallas local-update rows (tm<tile>)")
     args = ap.parse_args()
     fast = args.smoke or not args.full
     if args.inner:
@@ -149,4 +168,5 @@ if __name__ == "__main__":
         _inner(args)
     else:
         main(fast_mode=fast, mloc=args.mloc, dim=args.dim, slate=args.slate,
-             window=args.window, trials=args.trials, batch=args.batch)
+             window=args.window, trials=args.trials, batch=args.batch,
+             tile_m=args.tile_m)

@@ -17,11 +17,17 @@ Dispatch rules:
   smaller windows run the O(w M)-per-step incremental sliding-window
   greedy (unbounded slate length);
 * ``spec.backend`` — "jnp" lowers through XLA; "pallas" routes low-rank
-  inputs through the TPU kernel (interpret-mode on CPU; dense inputs
-  are rejected — the kernel never materializes L); "sharded" shards the
+  inputs through the TPU kernels (interpret-mode on CPU; dense inputs
+  are rejected — the kernels never materialize L); "sharded" shards the
   candidate axis M over ``spec.mesh``'s ``spec.axis_name`` (low-rank;
   batched V runs all B users on the mesh at once); "auto" picks
-  "sharded" when a mesh is set, else "jnp".
+  "sharded" when a mesh is set, else "jnp";
+* ``spec.tile_m`` — candidate-axis tile for the Pallas kernels.  On the
+  pallas backend it forces the tiled streaming kernels (by default
+  ``TilePolicy`` keeps the whole-working-set resident kernels while
+  they fit VMEM and tiles past that); on the sharded backend each
+  device's local per-step update reuses the same tiled kernel on its
+  (D, M/P) shard.
 
 ``GreedySpec`` validates itself at construction — a bad config raises
 ``GreedySpecError`` (a ``ValueError``) at spec-build time instead of
@@ -66,12 +72,28 @@ class GreedySpec:
     interpret: bool = True  # Pallas interpret mode (CPU dev/test)
     mesh: Optional[object] = None  # jax Mesh for the sharded backend
     axis_name: str = "data"  # mesh axis the candidate axis shards over
+    tile_m: Optional[int] = None  # Pallas candidate-axis tile (None = auto)
 
     def __post_init__(self):
         if self.k <= 0:
             raise GreedySpecError(f"k must be >= 1, got {self.k}")
         if self.window is not None and self.window < 1:
             raise GreedySpecError(f"window must be >= 1, got {self.window}")
+        if self.tile_m is not None:
+            from repro.kernels.dpp_greedy.tiling import validate_tile_m
+
+            try:
+                validate_tile_m(self.tile_m)
+            except ValueError as e:
+                raise GreedySpecError(str(e)) from None
+            if self.backend == "jnp" or (
+                self.backend == "auto" and self.mesh is None
+            ):
+                raise GreedySpecError(
+                    "tile_m= only applies to the Pallas kernels (backend="
+                    "'pallas', or 'sharded'/'auto' with a mesh) — on the "
+                    "jnp backend it would be silently ignored"
+                )
         if self.backend not in _BACKENDS:
             raise GreedySpecError(
                 f"unknown backend {self.backend!r}; expected one of {_BACKENDS}"
@@ -145,6 +167,8 @@ def greedy_map(
             window=spec.window,
             eps=spec.eps,
             mask=mask,
+            tile_m=spec.tile_m,
+            interpret=spec.interpret,
         )
 
     if spec.backend == "pallas":
@@ -160,6 +184,7 @@ def greedy_map(
             eps=spec.eps,
             interpret=spec.interpret,
             window=spec.window,
+            tile_m=spec.tile_m,
         )
         n = jnp.sum(sel >= 0, axis=-1).astype(jnp.int32)
         res = GreedyResult(sel, n, dh)

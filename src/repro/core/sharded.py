@@ -22,7 +22,11 @@ collective instead of ``B`` sequential ones.
 Per greedy step, inside one ``shard_map``:
 
 1. **local update** — each device updates its candidate shard
-   (O(D M / P) exact, O(w M / P) windowed);
+   (O(D M / P) exact, O(w M / P) windowed); with ``tile_m=`` set it
+   runs through the same tiled, double-buffered Pallas pass as the
+   single-device streaming kernel (``repro.kernels.dpp_greedy.tiled``),
+   so M/P shards past the VMEM budget stream in tiles instead of
+   lowering through unfused jnp;
 2. **global argmax** — an all-gather allreduce of per-device
    ``(d2_max, global_index)`` pairs (P tiny pairs), first-occurrence
    tie-breaking identical to a single-device ``argmax``;
@@ -94,9 +98,58 @@ def _bcast_from_owner(parts, owner, axis_name):
     return jax.lax.psum(jnp.where(owner, z, jnp.zeros_like(z)), axis_name)
 
 
-def _exact_body(k: int, eps: float, axis_name: str):
+def _exact_body(
+    k: int, eps: float, axis_name: str,
+    tile_m: Optional[int] = None, interpret: bool = True,
+):
     """Algorithm 1 with the candidate axis sharded; mirrors
-    ``greedy_chol._greedy_loop`` operation-for-operation on each shard."""
+    ``greedy_chol._greedy_loop`` operation-for-operation on each shard.
+
+    With ``tile_m`` set, the local per-step update (the O(D M/P) matvec
+    + Cholesky append + d2 downdate) runs through the same tiled Pallas
+    pass as the single-device streaming kernel
+    (``kernels.dpp_greedy.tiled.tiled_update_exact``) — the shard's
+    global column offset makes the winner masking land on the owner —
+    so an M/P shard past the VMEM budget streams in double-buffered
+    tiles instead of lowering through unfused jnp."""
+
+    def body_fn_tiled(Vl, maskl):
+        from repro.kernels.dpp_greedy.tiled import tiled_update_exact
+
+        D, Mloc = Vl.shape
+        dtype = Vl.dtype
+        eps2 = jnp.asarray(eps, dtype) ** 2
+        ax = jax.lax.axis_index(axis_name)
+        off = ax.astype(jnp.int32) * Mloc
+
+        diag = jnp.sum(Vl * Vl, axis=0)
+        d2 = jnp.where(maskl, diag, NEG_INF)
+        # row layout (k, Mloc) — the tiled pass streams C in
+        # (rows, tile_m) blocks alongside V
+        C = jnp.zeros((k, Mloc), dtype)
+        sel = jnp.full((k,), -1, jnp.int32)
+        d_hist = jnp.zeros((k,), dtype)
+
+        def body(t, state):
+            C, d2, sel, d_hist, stopped = state
+            jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
+            stopped = stopped | (dj2 <= eps2)
+            dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+            # winner broadcast: V[:, j] and its Cholesky column c_j
+            z = _bcast_from_owner((Vl[:, jl], C[:, jl]), owner, axis_name)
+            vj, cj = z[:D], z[D:]
+            e, d2 = tiled_update_exact(
+                Vl, C, d2, vj, cj, dj, stopped, j, off,
+                tile_m=tile_m, interpret=interpret,
+            )
+            C = C.at[t].set(e)
+            sel = sel.at[t].set(jnp.where(stopped, -1, j))
+            d_hist = d_hist.at[t].set(jnp.where(stopped, 0.0, dj))
+            return C, d2, sel, d_hist, stopped
+
+        state = (C, d2, sel, d_hist, jnp.asarray(False))
+        _, _, sel, d_hist, _ = jax.lax.fori_loop(0, k, body, state)
+        return sel, jnp.sum(sel >= 0).astype(jnp.int32), d_hist
 
     def body_fn(Vl, maskl):
         D, Mloc = Vl.shape
@@ -107,6 +160,9 @@ def _exact_body(k: int, eps: float, axis_name: str):
 
         diag = jnp.sum(Vl * Vl, axis=0)
         d2 = jnp.where(maskl, diag, NEG_INF)
+        # column layout (Mloc, k), as in greedy_chol — kept so the jnp
+        # path's reduction order (and therefore d_hist) stays bitwise
+        # identical to the single-device implementation
         C = jnp.zeros((Mloc, k), dtype)
         sel = jnp.full((k,), -1, jnp.int32)
         d_hist = jnp.zeros((k,), dtype)
@@ -134,10 +190,13 @@ def _exact_body(k: int, eps: float, axis_name: str):
         _, _, sel, d_hist, _ = jax.lax.fori_loop(0, k, body, state)
         return sel, jnp.sum(sel >= 0).astype(jnp.int32), d_hist
 
-    return body_fn
+    return body_fn_tiled if tile_m is not None else body_fn
 
 
-def _windowed_body(k: int, window: int, eps: float, axis_name: str):
+def _windowed_body(
+    k: int, window: int, eps: float, axis_name: str,
+    tile_m: Optional[int] = None, interpret: bool = True,
+):
     """Sliding-window greedy with the candidate axis sharded; mirrors
     ``windowed._windowed_loop``.
 
@@ -146,8 +205,76 @@ def _windowed_body(k: int, window: int, eps: float, axis_name: str):
     tiny ``(w, w)`` block first and every device then applies identical
     rotations to its local rows (and to the gathered block, which tracks
     the window columns through the loop).
+
+    With ``tile_m`` set, the rotation coefficients are instead
+    precomputed from the replicated ``(w, w)`` factor
+    (``kernels.dpp_greedy.tiled.eviction_coeffs`` — the identical
+    recurrence, factored out of the row sweep), the winner's
+    post-eviction column and repaired ``d2[j]`` are derived from its
+    broadcast *pre*-eviction column the same way, and the whole local
+    evict + append lands in one ``tiled_update_windowed`` Pallas sweep
+    over the shard.
     """
     w = min(window, k)
+
+    def body_fn_tiled(Vl, maskl):
+        from repro.kernels.dpp_greedy.tiled import (
+            eviction_coeffs,
+            tiled_update_windowed,
+        )
+
+        D, Mloc = Vl.shape
+        dtype = Vl.dtype
+        eps2 = jnp.asarray(eps, dtype) ** 2
+        ax = jax.lax.axis_index(axis_name)
+        off = ax.astype(jnp.int32) * Mloc
+
+        diag = jnp.sum(Vl * Vl, axis=0)
+        d2 = jnp.where(maskl, diag, NEG_INF)
+        C = jnp.zeros((w, Mloc), dtype)
+        win = jnp.full((w,), -1, jnp.int32)  # window order: 0 = oldest
+        sel = jnp.full((k,), -1, jnp.int32)
+        d_hist = jnp.zeros((k,), dtype)
+
+        def body(t, state):
+            C, d2, win, sel, d_hist, stopped = state
+            win0 = win
+            jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
+            stopped = stopped | (dj2 <= eps2)
+            dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+
+            # replicate the (w, w) window factor and the winner's
+            # PRE-eviction column; everything data-dependent but small
+            # is resolved here, between sweeps
+            li = win - off
+            owned = (win >= 0) & (li >= 0) & (li < Mloc)
+            cols = jnp.take(C, jnp.clip(li, 0, Mloc - 1), axis=1)
+            Cw = jax.lax.psum(
+                jnp.where(owned[None, :], cols, jnp.zeros_like(cols)),
+                axis_name,
+            )
+            z = _bcast_from_owner((Vl[:, jl], C[:, jl]), owner, axis_name)
+            vj, cj_pre = z[:D], z[D:]
+            full = jnp.logical_and(t >= w, jnp.logical_not(stopped))
+            cos, sin, cj_post, d2j = eviction_coeffs(
+                Cw, cj_pre, dj2, full, w
+            )
+            djp = jnp.sqrt(jnp.maximum(d2j, eps2))
+            pos = jnp.minimum(t, w - 1)
+            C, d2 = tiled_update_windowed(
+                Vl, C, d2, vj, cj_post, djp, stopped, full, cos, sin,
+                j, off, pos, w=w, tile_m=tile_m, interpret=interpret,
+            )
+            win_shift = jnp.roll(win, -1)
+            win1 = jnp.where(full, win_shift.at[w - 1].set(-1), win)
+            win = jnp.where(stopped, win0, win1.at[pos].set(j))
+            sel = sel.at[t].set(jnp.where(stopped, -1, j))
+            d_hist = d_hist.at[t].set(jnp.where(stopped, 0.0, dj))
+            return C, d2, win, sel, d_hist, stopped
+
+        state = (C, d2, win, sel, d_hist, jnp.asarray(False))
+        _, _, _, sel, d_hist, _ = jax.lax.fori_loop(0, k, body, state)
+        return sel, jnp.sum(sel >= 0).astype(jnp.int32), d_hist
 
     def body_fn(Vl, maskl):
         D, Mloc = Vl.shape
@@ -237,7 +364,7 @@ def _windowed_body(k: int, window: int, eps: float, axis_name: str):
         _, _, _, sel, d_hist, _ = jax.lax.fori_loop(0, k, body, state)
         return sel, jnp.sum(sel >= 0).astype(jnp.int32), d_hist
 
-    return body_fn
+    return body_fn_tiled if tile_m is not None else body_fn
 
 
 # Compiled shard_map callables, keyed by (mesh, axis_name, static args).
@@ -247,12 +374,13 @@ def _windowed_body(k: int, window: int, eps: float, axis_name: str):
 @functools.lru_cache(maxsize=64)
 def _greedy_fn(
     mesh, axis_name: str, k: int, window: Optional[int], eps: float,
-    batched: bool = False,
+    batched: bool = False, tile_m: Optional[int] = None,
+    interpret: bool = True,
 ):
     if window is None:
-        body = _exact_body(k, eps, axis_name)
+        body = _exact_body(k, eps, axis_name, tile_m, interpret)
     else:
-        body = _windowed_body(k, window, eps, axis_name)
+        body = _windowed_body(k, window, eps, axis_name, tile_m, interpret)
     if batched:
         # vmap inside shard_map: every device runs all B users on its
         # (B, D, Mloc) block and the per-step collectives batch over B
@@ -279,6 +407,8 @@ def dpp_greedy_sharded(
     window: Optional[int] = None,
     eps: float = 1e-6,
     mask: Optional[jnp.ndarray] = None,
+    tile_m: Optional[int] = None,
+    interpret: bool = True,
 ) -> GreedyResult:
     """Greedy DPP MAP with the candidate axis of ``V`` sharded.
 
@@ -299,6 +429,14 @@ def dpp_greedy_sharded(
     (``k`` beyond ~``D`` selections) the argmax runs on rounding noise
     on any backend — set ``eps`` to stop there (paper eq. 20), as the
     single-device paths also should.
+
+    ``tile_m`` routes each device's local per-step update through the
+    tiled streaming Pallas pass (``repro.kernels.dpp_greedy.tiled``) in
+    ``tile_m``-column blocks — the same kernel the single-device tiled
+    path runs — so shards whose (D, M/P) working set exceeds the VMEM
+    budget stream through it instead of lowering through unfused jnp.
+    ``M`` is padded up to a multiple of ``P * tile_m``.  ``interpret``
+    applies to those Pallas calls (interpret mode on CPU meshes).
     """
     if V.ndim not in (2, 3):
         raise ValueError(
@@ -309,6 +447,9 @@ def dpp_greedy_sharded(
         raise ValueError(f"k must be >= 1, got {k}")
     if window is not None and window < 1:
         raise ValueError(f"window must be >= 1, got {window}")
+    from repro.kernels.dpp_greedy.tiling import validate_tile_m
+
+    validate_tile_m(tile_m)
     batched = V.ndim == 3
     nshards = _mesh_axis_size(mesh, axis_name)
     M = V.shape[-1]
@@ -317,28 +458,65 @@ def dpp_greedy_sharded(
         mask = jnp.ones(mask_shape, bool)
     elif mask.shape != mask_shape:
         mask = jnp.broadcast_to(mask, mask_shape)
-    Mp = -(-M // nshards) * nshards
+    quantum = nshards * (tile_m or 1)
+    Mp = -(-M // quantum) * quantum
     if Mp != M:
         pad = [(0, 0)] * (V.ndim - 1) + [(0, Mp - M)]
         V = jnp.pad(V, pad)
         mask = jnp.pad(mask, pad[1:], constant_values=False)
     window_eff = window if (window is not None and window < k) else None
-    fn = _greedy_fn(mesh, axis_name, k, window_eff, float(eps), batched)
+    fn = _greedy_fn(
+        mesh, axis_name, k, window_eff, float(eps), batched, tile_m,
+        interpret,
+    )
     sel, n, d_hist = fn(V, mask)
     return GreedyResult(sel, n, d_hist)
 
 
 @functools.lru_cache(maxsize=64)
 def _topk_fn(mesh, axis_name: str, c: int, batched: bool = False):
+    nsh = _mesh_axis_size(mesh, axis_name)
+    # log(P) tree merge: recursive doubling over the hypercube — at
+    # round r every device exchanges its current top-c with its
+    # (axis ^ 2^r) partner and keeps the top-c of the union, so after
+    # log2(P) rounds every device holds the exact global top-c having
+    # moved P*log(P)*c values total instead of the all-gather's P^2*c
+    # replicated payload.  Requires power-of-two P; other axis sizes
+    # keep the all-gather merge.
+    tree = nsh > 1 and (nsh & (nsh - 1)) == 0
+
     def body(s):
         Mloc = s.shape[0]
         off = jax.lax.axis_index(axis_name).astype(jnp.int32) * Mloc
         cl = min(c, Mloc)
         v, i = jax.lax.top_k(s, cl)
-        av = jax.lax.all_gather(v, axis_name).reshape(-1)
-        ai = jax.lax.all_gather(i.astype(jnp.int32) + off, axis_name).reshape(-1)
-        vv, pp = jax.lax.top_k(av, c)
-        return vv, ai[pp]
+        gi = i.astype(jnp.int32) + off
+        if not tree:
+            av = jax.lax.all_gather(v, axis_name).reshape(-1)
+            ai = jax.lax.all_gather(gi, axis_name).reshape(-1)
+            vv, pp = jax.lax.top_k(av, c)
+            return vv, ai[pp]
+        if cl < c:  # pad local lists to a common length c
+            v = jnp.concatenate([v, jnp.full((c - cl,), NEG_INF, v.dtype)])
+            gi = jnp.concatenate(
+                [gi, jnp.full((c - cl,), jnp.iinfo(jnp.int32).max, jnp.int32)]
+            )
+        # sort keys (-value, index): value-descending with lowest-global-
+        # index tie-breaking — exactly the order (and tie winners)
+        # jax.lax.top_k produces on the gathered vector, because each
+        # local top_k already lists equal values by ascending index
+        nv = -v
+        for step in range(nsh.bit_length() - 1):
+            d = 1 << step
+            perm = [(p, p ^ d) for p in range(nsh)]
+            pnv = jax.lax.ppermute(nv, axis_name, perm)
+            pgi = jax.lax.ppermute(gi, axis_name, perm)
+            snv, sgi = jax.lax.sort(
+                (jnp.concatenate([nv, pnv]), jnp.concatenate([gi, pgi])),
+                num_keys=2,
+            )
+            nv, gi = snv[:c], sgi[:c]
+        return -nv, gi
 
     if batched:
         body = jax.vmap(body)
@@ -359,12 +537,16 @@ def sharded_topk(scores: jnp.ndarray, c: int, *, mesh, axis_name: str = "data"):
     """Global top-c of a candidate-sharded score vector ``scores (M,)``
     or score batch ``(B, M)``.
 
-    Each shard takes a local top-``min(c, M/P)``, one all-gather merges
-    the survivors, and a tiny replicated ``top_k`` finishes — the
-    sharded replacement for a single-device ``jax.lax.top_k`` shortlist.
-    Returns ``(values (c,), global indices (c,) int32)`` — leading B
-    axis when batched — with the same value order and lowest-index
-    tie-breaking as ``jax.lax.top_k`` on the gathered vector(s).
+    Each shard takes a local top-``min(c, M/P)``; the survivors then
+    merge in ``log2(P)`` recursive-doubling rounds (pairwise
+    ``lax.ppermute`` exchange + top-c reduce — exact, since every
+    global top-c element survives its own shard's local top-c and
+    top-c-of-unions preserves it), falling back to a single all-gather
+    merge when P is not a power of two.  The sharded replacement for a
+    single-device ``jax.lax.top_k`` shortlist.  Returns
+    ``(values (c,), global indices (c,) int32)`` — leading B axis when
+    batched — with the same value order and lowest-index tie-breaking
+    as ``jax.lax.top_k`` on the gathered vector(s).
     """
     if scores.ndim not in (1, 2):
         raise ValueError(

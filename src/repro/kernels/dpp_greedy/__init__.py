@@ -1,4 +1,20 @@
 from repro.kernels.dpp_greedy.ops import dpp_greedy, vmem_bytes
 from repro.kernels.dpp_greedy.ref import dpp_greedy_ref
+from repro.kernels.dpp_greedy.tiled import dpp_greedy_tiled
+from repro.kernels.dpp_greedy.tiling import (
+    TilePolicy,
+    VMEM_BUDGET_BYTES,
+    tile_vmem_bytes,
+    untiled_vmem_bytes,
+)
 
-__all__ = ["dpp_greedy", "dpp_greedy_ref", "vmem_bytes"]
+__all__ = [
+    "dpp_greedy",
+    "dpp_greedy_ref",
+    "dpp_greedy_tiled",
+    "TilePolicy",
+    "VMEM_BUDGET_BYTES",
+    "tile_vmem_bytes",
+    "untiled_vmem_bytes",
+    "vmem_bytes",
+]

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: whole-slate greedy DPP MAP inference in VMEM.
+"""Pallas TPU kernels: whole-slate greedy DPP MAP inference, VMEM-resident.
 
 TPU-native adaptation of the paper's Algorithm 1 (DESIGN.md §3):
 
@@ -22,10 +22,16 @@ the rows of ``C``, with the rotation residue row repairing ``d2``), and
 append (the same eq. 16-18 row append as the full kernel, against the
 post-eviction window).  See ``repro.core.windowed`` for the math.
 
-VMEM working set: ``V`` (D*M*4) + ``C`` (N*M*4, or w*M*4 windowed) +
-``d2/e`` rows — e.g. D=128, M=4096, N=64: 2 MB + 1 MB, comfortably
-inside 16 MB v5e VMEM.  The ops.py wrapper falls back to the pure-jnp
-path when it would not fit.
+VMEM working set (resident mode): ``V`` (D*M*4) + ``C`` (N*M*4, or
+w*M*4 windowed) + ``d2/e`` rows — e.g. D=128, M=4096, N=64: 2 MB +
+1 MB, comfortably inside 16 MB v5e VMEM
+(``tiling.untiled_vmem_bytes``).  These kernels hold that working set
+*whole*, which is what buys the zero-HBM-round-trip greedy loop — and
+what caps M.  Past the budget the ops.py wrapper dispatches the tiled
+streaming kernels in ``tiled.py`` instead (per-step grid sweeps over
+``(D, tile_m)`` blocks, double-buffered HBM<->VMEM, VMEM bounded per
+*tile* by ``tiling.tile_vmem_bytes``) — there is no silent jnp fallback
+at scale any more; the jnp oracle needs an explicit ``force_jnp=True``.
 """
 from __future__ import annotations
 

@@ -1,36 +1,46 @@
-"""Jitted public wrapper for the dpp_greedy Pallas kernel.
+"""Jitted public wrapper for the dpp_greedy Pallas kernels.
 
-Handles TPU-friendly padding (M to a lane multiple, D to a sublane
-multiple) and falls back to the pure-jnp path when the VMEM working set
-would not fit (large M) or when the caller asks for it.
+Kernel-first dispatch (``TilePolicy``): when the whole working set
+``V (D, M)`` + Cholesky state fits the VMEM budget, the resident
+whole-slate kernels in ``dpp_greedy.py`` run (the entire greedy loop in
+one ``pallas_call``); past the budget the **tiled streaming kernels**
+in ``tiled.py`` run instead — each greedy step is a double-buffered
+grid sweep over ``(D, tile_m)`` / ``(state_rows, tile_m)`` blocks, so
+large M no longer degrades to the pure-jnp path.  VMEM accounting is
+per *tile* (``tiling.tile_vmem_bytes``); the old whole-array
+``vmem_bytes`` survives as a deprecation shim and no longer gates
+anything.
 
-``window=w`` selects the sliding-window kernel: the Cholesky state in
-VMEM shrinks from (k, M) to (w, M), so the VMEM budget check — and
-therefore the largest candidate set M the kernel accepts — depends on
-``w`` rather than the slate length ``k``.
+The pure-jnp reference remains reachable via ``force_jnp=True`` (and as
+a last resort when even one lane-width tile would not fit — pathological
+``D``/``state_rows``).
+
+``window=w`` selects the sliding-window variants: the Cholesky state
+shrinks from (k, M) to (w, M), so both the resident-mode budget check
+and the per-tile model depend on ``w`` rather than the slate length.
 """
 from __future__ import annotations
 
-import jax
+from typing import Optional
+
 import jax.numpy as jnp
 
 from repro.kernels.dpp_greedy.dpp_greedy import dpp_greedy_kernel
 from repro.kernels.dpp_greedy.ref import dpp_greedy_ref
-
-LANE = 128
-SUBLANE = 8
-# V (D*M) + C (state_rows*M) + a few (1, M) rows, all f32, in ~16 MB VMEM.
-VMEM_BUDGET_BYTES = 12 * 1024 * 1024
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
-
-
-def vmem_bytes(D: int, M: int, state_rows: int) -> int:
-    """VMEM working set; ``state_rows`` is k (full) or w (windowed)."""
-    Mp, Dp = _round_up(M, LANE), _round_up(D, SUBLANE)
-    return 4 * (Dp * Mp + _round_up(state_rows, SUBLANE) * Mp + 8 * Mp)
+from repro.kernels.dpp_greedy.tiled import dpp_greedy_tiled
+# VMEM_BUDGET_BYTES / tile_vmem_bytes / untiled_vmem_bytes / vmem_bytes
+# are re-exported for back-compat: pre-tiling callers imported the
+# budget and accounting from ops (the module that used to own the gate).
+from repro.kernels.dpp_greedy.tiling import (  # noqa: F401
+    LANE,
+    SUBLANE,
+    VMEM_BUDGET_BYTES,
+    TilePolicy,
+    round_up as _round_up,
+    tile_vmem_bytes,
+    untiled_vmem_bytes,
+    vmem_bytes,
+)
 
 
 def dpp_greedy(
@@ -41,6 +51,8 @@ def dpp_greedy(
     interpret: bool = True,
     force_jnp: bool = False,
     window: int | None = None,
+    tile_m: Optional[int] = None,
+    tile_policy: Optional[TilePolicy] = None,
 ):
     """Batched greedy DPP MAP inference.
 
@@ -48,21 +60,39 @@ def dpp_greedy(
     shape (B, k); sel slots after an eps-stop hold -1.  ``window=w``
     enforces diversity only against the last w picks (O(w M) VMEM state,
     unbounded k); ``window >= k`` or None is the exact Algorithm 1.
+
+    ``tile_m`` (or a full ``tile_policy``) forces the tiled streaming
+    kernels with that candidate-axis tile; by default ``TilePolicy``
+    picks the resident kernels when the working set fits VMEM and the
+    widest fitting tile otherwise.
     """
     B, D, M = V.shape
     if window is not None and window < 1:
         raise ValueError(f"window must be >= 1, got {window}")
+    if tile_m is not None and tile_policy is not None:
+        raise ValueError("pass at most one of tile_m= or tile_policy=")
     if mask is None:
         mask = jnp.ones((B, M), bool)
     state_rows = k if window is None else min(window, k)
-    if force_jnp or vmem_bytes(D, M, state_rows) > VMEM_BUDGET_BYTES:
+    if force_jnp:
         return dpp_greedy_ref(V, mask, k, eps, window=window)
 
-    Mp, Dp = _round_up(M, LANE), _round_up(D, SUBLANE)
+    policy = tile_policy or TilePolicy(tile_m=tile_m)
+    windowed = window is not None and window < k
+    mode, tm = policy.decide(D, M, state_rows, windowed)
+    if mode == "jnp":  # even a single lane-width tile exceeds the budget
+        return dpp_greedy_ref(V, mask, k, eps, window=window)
+
+    Dp = _round_up(D, SUBLANE)
+    Mp = _round_up(M, LANE if mode == "resident" else tm)
     if (Mp, Dp) != (M, D):
         V = jnp.pad(V, ((0, 0), (0, Dp - D), (0, Mp - M)))
         mask = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, Mp - M)))
-    sel, dhist = dpp_greedy_kernel(
-        V, mask, k=k, window=window, eps=eps, interpret=interpret
+    if mode == "resident":
+        return dpp_greedy_kernel(
+            V, mask, k=k, window=window, eps=eps, interpret=interpret
+        )
+    return dpp_greedy_tiled(
+        V, mask, k, window=window, eps=eps, tile_m=min(tm, Mp),
+        interpret=interpret,
     )
-    return sel, dhist

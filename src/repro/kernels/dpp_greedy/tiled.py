@@ -1,0 +1,426 @@
+"""Tiled, double-buffered Pallas greedy kernels — past-the-VMEM-gate M.
+
+The resident kernels in ``dpp_greedy.py`` hold ``V (D, M)`` and the
+Cholesky state whole in VMEM, which caps M at the VMEM budget.  Here
+each greedy step is one **grid sweep over M-tiles**: per grid step only
+a ``(D, tile_m)`` block of ``V``, a ``(state_rows, tile_m)`` block of
+``C`` and a ``(1, tile_m)`` block of ``d2`` are VMEM-resident, and the
+Pallas BlockSpec pipeline double-buffers the HBM->VMEM / VMEM->HBM
+copies of consecutive tiles while the current tile computes.
+
+Per-step structure (the paper's eqs. 13/16-18 restructured for
+streaming):
+
+1. **streamed pass** (``_pass_full`` / ``_pass_windowed``): every tile
+   applies the update for the *previously selected* winner ``j`` —
+   ``e = (L_j - c_j^T C) / d_j`` on the MXU, ``d2 -= e^2``, the row
+   append (and, windowed, the eviction Givens rotations) — and folds a
+   running ``(d2_max, argmax)`` reduction into revisited ``(1, 1)``
+   output cells, so the next winner is known when the sweep ends;
+2. **winner-column visit**: only the winner's column is touched —
+   ``V[:, j]`` and ``C[:, j]`` are gathered at the JAX level (an O(D)
+   /O(state_rows) dynamic slice into HBM, not another sweep) and fed
+   to the next step's pass as tiny replicated operands.
+
+Everything data-dependent but small — the winner column, the windowed
+eviction rotation coefficients (computed from the ``(w, w)`` window
+factor ``C[:, win]``), the eps-stop flag — is resolved between sweeps
+at the JAX level, so the kernels themselves stay shape-static.
+
+The same pass kernels serve the candidate-sharded backend: each device
+of ``repro.core.sharded`` runs the identical local update on its
+``(D, M/P)`` shard (``tiled_update_exact`` / ``tiled_update_windowed``
+with the shard's global column offset), so sharded M/P blocks scale
+past the VMEM budget exactly like the single-device path.
+
+Dispatch between resident and tiled kernels lives in ``ops.py`` via
+``repro.kernels.dpp_greedy.tiling.TilePolicy``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# Per-tile pass kernels
+# ---------------------------------------------------------------------------
+
+
+def _reduce_running_argmax(i, d2, mx_ref, am_ref, tile_m):
+    """Fold this tile's (max, argmax) of ``d2 (1, tile_m)`` into the
+    revisited (1, 1) output cells; ties keep the earlier (lower) index,
+    matching ``jnp.argmax`` over the concatenated axis."""
+
+    @pl.when(i == 0)
+    def _():
+        mx_ref[...] = jnp.full(mx_ref.shape, NEG_INF, jnp.float32)
+        am_ref[...] = jnp.zeros(am_ref.shape, jnp.int32)
+
+    lm = jnp.max(d2[0])
+    la = jnp.argmax(d2[0]).astype(jnp.int32) + i * tile_m
+    better = lm > mx_ref[0, 0]
+    mx_ref[0, 0] = jnp.where(better, lm, mx_ref[0, 0])
+    am_ref[0, 0] = jnp.where(better, la, am_ref[0, 0])
+
+
+def _pass_full(
+    v_ref, c_ref, d2_ref, vj_ref, cj_ref, flt_ref, int_ref,
+    e_ref, d2o_ref, mx_ref, am_ref, *, tile_m: int,
+):
+    """One M-tile of one exact-Algorithm-1 greedy step.
+
+    v_ref:  (D, TM) f32 — tile of the scaled features, L = V^T V
+    c_ref:  (R, TM) f32 — tile of the Cholesky rows (rows >= t are 0)
+    d2_ref: (1, TM) f32 — tile of the marginal gains
+    vj_ref: (1, D), cj_ref: (1, R) — the winner's columns (replicated)
+    flt_ref:(1, 2) f32 — [d_j, stopped]
+    int_ref:(1, 2) i32 — [j (global id), base (global id of column 0)]
+    e_ref:  (1, TM) out — the appended Cholesky row (eqs. 16-18)
+    d2o_ref:(1, TM) out — updated gains
+    mx/am:  (1, 1) out — running (d2_max, argmax), revisited across tiles
+    """
+    i = pl.program_id(1)
+    dj = flt_ref[0, 0]
+    stopped = flt_ref[0, 1] > 0
+    j = int_ref[0, 0]
+    base = int_ref[0, 1]
+    d2 = d2_ref[...]
+
+    lj = jnp.dot(vj_ref[...], v_ref[...], preferred_element_type=jnp.float32)
+    dots = jnp.dot(cj_ref[...], c_ref[...], preferred_element_type=jnp.float32)
+    e = (lj - dots) / dj
+    e = jnp.where(stopped, jnp.zeros_like(e), e)
+    e_ref[...] = e
+
+    gid = jax.lax.broadcasted_iota(jnp.int32, (1, tile_m), 1) + i * tile_m + base
+    d2_next = jnp.where(gid == j, NEG_INF, d2 - e * e)
+    d2o = jnp.where(stopped, d2, d2_next)
+    d2o_ref[...] = d2o
+    _reduce_running_argmax(i, d2o, mx_ref, am_ref, tile_m)
+
+
+def _pass_windowed(
+    v_ref, c_ref, d2_ref, vj_ref, cj_ref, flt_ref, int_ref,
+    co_ref, d2o_ref, mx_ref, am_ref, *, w: int, tile_m: int,
+):
+    """One M-tile of one sliding-window greedy step: eviction (Givens
+    rotations with precomputed coefficients) fused with the append.
+
+    c_ref:  (w, TM) — tile of the window Cholesky ring (window order)
+    cj_ref: (1, w)  — the winner's POST-eviction column (replicated)
+    flt_ref:(1, 3 + 2(w-1)) f32 — [d_j', stopped, full,
+            cos_0..cos_{w-2}, sin_0..sin_{w-2}]; identity rotations
+            (cos=1, sin=0) are passed when the window is not yet full
+    int_ref:(1, 3) i32 — [j, base, pos (ring row receiving the append)]
+    co_ref: (w, TM) out — post-eviction, post-append ring tile
+    """
+    i = pl.program_id(1)
+    djp = flt_ref[0, 0]
+    stopped = flt_ref[0, 1] > 0
+    full = flt_ref[0, 2] > 0
+    j = int_ref[0, 0]
+    base = int_ref[0, 1]
+    pos = int_ref[0, 2]
+    d2 = d2_ref[...]
+    C = c_ref[...]  # (w, TM)
+
+    # ---- evict the oldest pick: first-row Cholesky downdate; the
+    # rotation residue u repairs d2 (see repro.core.windowed)
+    u = jnp.where(full, C[0:1, :], jnp.zeros((1, tile_m), jnp.float32))
+    rows = []
+    for r in range(w - 1):
+        cos = flt_ref[0, 3 + r]
+        sin = flt_ref[0, 3 + (w - 1) + r]
+        row = jnp.where(full, C[r + 1 : r + 2, :], C[r : r + 1, :])
+        rows.append(cos * row + sin * u)
+        u = cos * u - sin * row
+    last = jnp.where(full, jnp.zeros((1, tile_m), jnp.float32), C[w - 1 : w, :])
+    Cpost = jnp.concatenate(rows + [last], axis=0) if w > 1 else last
+    d2e = jnp.where(full, d2 + u * u, d2)
+
+    # ---- append j against the post-eviction window (eqs. 16-18)
+    lj = jnp.dot(vj_ref[...], v_ref[...], preferred_element_type=jnp.float32)
+    dots = jnp.dot(cj_ref[...], Cpost, preferred_element_type=jnp.float32)
+    e = (lj - dots) / djp
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (w, 1), 0)
+    Cnew = jnp.where(ridx == pos, e, Cpost)
+    co_ref[...] = jnp.where(stopped, C, Cnew)
+
+    gid = jax.lax.broadcasted_iota(jnp.int32, (1, tile_m), 1) + i * tile_m + base
+    d2_next = jnp.where(gid == j, NEG_INF, d2e - e * e)
+    d2o = jnp.where(stopped, d2, d2_next)
+    d2o_ref[...] = d2o
+    _reduce_running_argmax(i, d2o, mx_ref, am_ref, tile_m)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (one grid sweep = one greedy step)
+# ---------------------------------------------------------------------------
+
+
+def _tile_spec(rows, tile_m):
+    return pl.BlockSpec((None, rows, tile_m), lambda b, i: (b, 0, i))
+
+
+def _small_spec(cols):
+    return pl.BlockSpec((None, 1, cols), lambda b, i: (b, 0, 0))
+
+
+def _sweep(kernel, row_out, V, C, d2, vj, cj, flt, ints, tile_m, interpret):
+    """Run one per-step grid sweep.  ``row_out`` is the row count of the
+    first (streamed) output: 1 for the exact append row, w for the
+    windowed post-eviction ring."""
+    B, D, Mp = V.shape
+    R = C.shape[1]
+    nt = Mp // tile_m
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nt),
+        in_specs=[
+            _tile_spec(D, tile_m),
+            _tile_spec(R, tile_m),
+            _tile_spec(1, tile_m),
+            _small_spec(D),
+            _small_spec(R),
+            _small_spec(flt.shape[-1]),
+            _small_spec(ints.shape[-1]),
+        ],
+        out_specs=[
+            _tile_spec(row_out, tile_m),
+            _tile_spec(1, tile_m),
+            _small_spec(1),
+            _small_spec(1),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, row_out, Mp), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, Mp), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(V, C, d2, vj, cj, flt, ints)
+
+
+def _full_sweep(V, C, d2, vj, cj, flt, ints, *, tile_m, interpret):
+    kernel = functools.partial(_pass_full, tile_m=tile_m)
+    return _sweep(kernel, 1, V, C, d2, vj, cj, flt, ints, tile_m, interpret)
+
+
+def _windowed_sweep(V, C, d2, vj, cj, flt, ints, *, w, tile_m, interpret):
+    kernel = functools.partial(_pass_windowed, w=w, tile_m=tile_m)
+    return _sweep(kernel, w, V, C, d2, vj, cj, flt, ints, tile_m, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Windowed eviction coefficients (shared with repro.core.sharded)
+# ---------------------------------------------------------------------------
+
+
+def eviction_coeffs(Cw, cj, dj2, full, w: int):
+    """Precompute the first-row Cholesky-downdate rotations from the
+    small replicated state, so a streamed sweep can apply them per tile.
+
+    Cw:   (..., w, w) — the window factor C[:, win] (column s = window
+          member s's Cholesky column); junk columns (win slot empty)
+          must be zeroed by the caller.
+    cj:   (..., w) — the winner's PRE-eviction Cholesky column.
+    dj2:  (...,)   — the winner's selection-time marginal gain d_j^2.
+    full: (...,) bool — eviction actually happens this step.
+
+    Returns ``(cos (..., w-1), sin (..., w-1), cj_post (..., w),
+    d2j (...,))`` — identity rotations, ``cj_post = cj`` and
+    ``d2j = dj2`` wherever ``full`` is False.  Applying (cos, sin) to
+    any column reproduces bit-for-bit what the in-place rotation sweep
+    of ``repro.core.windowed`` / ``core.sharded`` computes, because the
+    sweep only ever reads not-yet-rotated rows (row r+1 at iteration r).
+    """
+    tiny = 1e-30
+    fullb = full[..., None]
+    u_w = jnp.where(fullb, Cw[..., 0, :], 0.0)
+    u_c = jnp.where(full, cj[..., 0], 0.0)
+    coss, sins, cpost = [], [], []
+    for r in range(w - 1):
+        row_w = jnp.where(fullb, Cw[..., r + 1, :], Cw[..., r, :])
+        row_c = jnp.where(full, cj[..., r + 1], cj[..., r])
+        a = row_w[..., r + 1]
+        b = u_w[..., r + 1]
+        rho = jnp.maximum(jnp.sqrt(a * a + b * b), tiny)
+        cos = jnp.where(full, a / rho, 1.0)
+        sin = jnp.where(full, b / rho, 0.0)
+        coss.append(cos)
+        sins.append(sin)
+        cpost.append(cos * row_c + sin * u_c)
+        u_c = cos * u_c - sin * row_c
+        u_w = cos[..., None] * u_w - sin[..., None] * row_w
+    cpost.append(jnp.where(full, jnp.zeros_like(u_c), cj[..., w - 1]))
+    shape = full.shape + (w - 1,)
+    cos_arr = jnp.stack(coss, -1) if coss else jnp.zeros(shape, jnp.float32)
+    sin_arr = jnp.stack(sins, -1) if sins else jnp.zeros(shape, jnp.float32)
+    cj_post = jnp.stack(cpost, -1)
+    d2j = jnp.where(full, dj2 + u_c * u_c, dj2)
+    return cos_arr, sin_arr, cj_post, d2j
+
+
+# ---------------------------------------------------------------------------
+# Shard-local single-step updates (reused by repro.core.sharded)
+# ---------------------------------------------------------------------------
+
+
+def tiled_update_exact(
+    Vl, C, d2, vj, cj, dj, stopped, j, base, *, tile_m: int, interpret: bool = True
+):
+    """One exact greedy step's local update on a column shard.
+
+    Vl (D, Mloc) / C (k, Mloc) / d2 (Mloc,); vj (D,) / cj (k,) the
+    winner's replicated columns; ``j`` the winner's *global* id and
+    ``base`` this shard's global offset (0 on a single device).
+    Returns ``(e (Mloc,), d2 (Mloc,))`` — the caller appends ``e`` as
+    Cholesky row ``t``.  ``Mloc`` must be a multiple of ``tile_m``.
+    """
+    flt = jnp.stack([dj, stopped.astype(jnp.float32)])[None, None, :]
+    ints = jnp.stack([j, base]).astype(jnp.int32)[None, None, :]
+    e, d2o, _, _ = _full_sweep(
+        Vl[None], C[None], d2[None, None, :], vj[None, None, :],
+        cj[None, None, :], flt, ints, tile_m=tile_m, interpret=interpret,
+    )
+    return e[0, 0], d2o[0, 0]
+
+
+def tiled_update_windowed(
+    Vl, C, d2, vj, cj_post, djp, stopped, full, cos, sin, j, base, pos,
+    *, w: int, tile_m: int, interpret: bool = True,
+):
+    """One windowed greedy step's local update (evict + append fused) on
+    a column shard; coefficients from :func:`eviction_coeffs`.
+    Returns ``(C (w, Mloc), d2 (Mloc,))``."""
+    flt = jnp.concatenate(
+        [
+            jnp.stack([djp, stopped.astype(jnp.float32),
+                       full.astype(jnp.float32)]),
+            cos, sin,
+        ]
+    )[None, None, :]
+    ints = jnp.stack([j, base, pos]).astype(jnp.int32)[None, None, :]
+    Co, d2o, _, _ = _windowed_sweep(
+        Vl[None], C[None], d2[None, None, :], vj[None, None, :],
+        cj_post[None, None, :], flt, ints, w=w, tile_m=tile_m,
+        interpret=interpret,
+    )
+    return Co[0], d2o[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Whole-slate driver
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "window", "eps", "tile_m", "interpret")
+)
+def dpp_greedy_tiled(
+    V: jnp.ndarray,
+    mask: jnp.ndarray,
+    k: int,
+    window: int | None = None,
+    eps: float = 1e-3,
+    tile_m: int = 512,
+    interpret: bool = True,
+):
+    """Batched greedy DPP MAP with the candidate axis streamed in tiles.
+
+    V:    (B, D, M) f32, M a multiple of ``tile_m`` (ops.py pads)
+    mask: (B, M) float/bool — selectable candidates (padding False)
+    Returns (sel (B, k) i32, d_hist (B, k) f32), identical to the
+    resident kernels / the jnp oracle.
+
+    The k-step loop runs at the JAX level; each step launches one grid
+    sweep (see module docstring).  Unlike the resident kernels the
+    Cholesky state round-trips through HBM between steps — that is the
+    price of M not fitting in VMEM, and it is streamed, double-buffered
+    traffic, not a fallback to unfused jnp.
+    """
+    B, D, M = V.shape
+    if M % tile_m != 0:
+        raise ValueError(f"M={M} must be a multiple of tile_m={tile_m}")
+    V = V.astype(jnp.float32)
+    w = window if (window is not None and window < k) else None
+    R = k if w is None else w
+    eps2 = eps * eps
+
+    diag = jnp.sum(V * V, axis=1)  # (B, M)
+    d2 = jnp.where(mask > 0, diag, NEG_INF)[:, None, :]  # (B, 1, M)
+    C = jnp.zeros((B, R, M), jnp.float32)
+    sel = jnp.full((B, k), -1, jnp.int32)
+    dh = jnp.zeros((B, k), jnp.float32)
+    j0 = jnp.argmax(d2[:, 0, :], axis=1).astype(jnp.int32)
+    dj20 = jnp.take_along_axis(d2[:, 0, :], j0[:, None], axis=1)[:, 0]
+    stopped0 = jnp.zeros((B,), bool)
+    zero = jnp.zeros((B,), jnp.int32)
+
+    def select(t, sel, dh, stopped, j, dj2):
+        stopped = stopped | (dj2 <= eps2)
+        dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+        sel = sel.at[:, t].set(jnp.where(stopped, -1, j))
+        dh = dh.at[:, t].set(jnp.where(stopped, 0.0, dj))
+        vj = jnp.take_along_axis(V, j[:, None, None], axis=2)[:, :, 0]
+        return sel, dh, stopped, dj, vj
+
+    def step_full(t, carry):
+        C, d2, sel, dh, stopped, j, dj2 = carry
+        sel, dh, stopped, dj, vj = select(t, sel, dh, stopped, j, dj2)
+        cj = jnp.take_along_axis(C, j[:, None, None], axis=2)[:, :, 0]
+        flt = jnp.stack([dj, stopped.astype(jnp.float32)], 1)[:, None, :]
+        ints = jnp.stack([j, zero], 1)[:, None, :]
+        e, d2, mx, am = _full_sweep(
+            V, C, d2, vj[:, None, :], cj[:, None, :], flt, ints,
+            tile_m=tile_m, interpret=interpret,
+        )
+        C = jax.lax.dynamic_update_slice(C, e, (0, t, 0))
+        return C, d2, sel, dh, stopped, am[:, 0, 0], mx[:, 0, 0]
+
+    def step_windowed(t, carry):
+        C, d2, win, sel, dh, stopped, j, dj2 = carry
+        sel, dh, stopped, dj, vj = select(t, sel, dh, stopped, j, dj2)
+        cj_pre = jnp.take_along_axis(C, j[:, None, None], axis=2)[:, :, 0]
+        full = (t >= w) & ~stopped  # (B,)
+        Cw = jnp.take_along_axis(C, jnp.clip(win, 0)[:, None, :], axis=2)
+        Cw = jnp.where((win >= 0)[:, None, :], Cw, 0.0)
+        cos, sin, cj_post, d2j = eviction_coeffs(Cw, cj_pre, dj2, full, w)
+        djp = jnp.sqrt(jnp.maximum(d2j, eps2))
+        pos = jnp.minimum(t, w - 1)
+        flt = jnp.concatenate(
+            [
+                jnp.stack(
+                    [djp, stopped.astype(jnp.float32), full.astype(jnp.float32)],
+                    1,
+                ),
+                cos, sin,
+            ],
+            axis=1,
+        )[:, None, :]
+        ints = jnp.stack([j, zero, zero + pos], 1)[:, None, :]
+        C, d2, mx, am = _windowed_sweep(
+            V, C, d2, vj[:, None, :], cj_post[:, None, :], flt, ints,
+            w=w, tile_m=tile_m, interpret=interpret,
+        )
+        win_shift = jnp.roll(win, -1, axis=1)
+        win1 = jnp.where(full[:, None], win_shift.at[:, w - 1].set(-1), win)
+        win = jnp.where(stopped[:, None], win, win1.at[:, pos].set(j))
+        return C, d2, win, sel, dh, stopped, am[:, 0, 0], mx[:, 0, 0]
+
+    if w is None:
+        state = (C, d2, sel, dh, stopped0, j0, dj20)
+        _, _, sel, dh, _, _, _ = jax.lax.fori_loop(0, k, step_full, state)
+    else:
+        win0 = jnp.full((B, w), -1, jnp.int32)
+        state = (C, d2, win0, sel, dh, stopped0, j0, dj20)
+        _, _, _, sel, dh, _, _, _ = jax.lax.fori_loop(
+            0, k, step_windowed, state
+        )
+    return sel, dh

@@ -1,0 +1,161 @@
+"""Tile policy for the dpp_greedy Pallas kernels — the VMEM *model*, not
+a gate.
+
+Earlier revisions guarded the kernel with a single whole-array check
+(``vmem_bytes(D, M, state_rows) > VMEM_BUDGET_BYTES`` -> silently fall
+back to pure jnp), which surrendered exactly the large-M regime the
+paper's O(M)-per-step update is about.  ``TilePolicy`` replaces that
+gate with a decision between two *kernel* execution modes:
+
+* **resident** — the whole working set (``V (D, M)``, the Cholesky
+  state ``C (state_rows, M)`` and a few ``(1, M)`` rows) fits in VMEM:
+  run the classic whole-slate kernels in ``dpp_greedy.py`` (the entire
+  greedy loop inside one ``pallas_call``, zero HBM round-trips between
+  steps).
+* **tiled** — the working set exceeds the budget: run the streaming
+  kernels in ``tiled.py``.  Each greedy step is one grid sweep over
+  ``M``-tiles; per grid step only ``(D, tile_m)`` of ``V`` and
+  ``(state_rows, tile_m)`` of ``C`` are VMEM-resident, and the Pallas
+  BlockSpec pipeline double-buffers the HBM->VMEM (and VMEM->HBM)
+  copies of consecutive tiles.  The VMEM bound is per *tile*, so M is
+  unbounded.
+
+The pure-jnp path survives only as an explicit escape hatch
+(``force_jnp=True``) and as a last resort when even a single
+lane-width tile would not fit (pathological ``D``/``state_rows``).
+
+``vmem_bytes`` (the old whole-array accounting) is kept one release as
+a deprecation shim forwarding to :func:`untiled_vmem_bytes`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+LANE = 128
+SUBLANE = 8
+# Budget for f32 working sets inside ~16 MB/core VMEM, leaving headroom
+# for the compiler's own temporaries.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+# Upper bound for auto-chosen tiles: past this, wider tiles stop paying
+# (DMA is already fully amortized) and only lengthen the pipeline warmup.
+MAX_AUTO_TILE = 1 << 16
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` >= ``x`` (TPU lane/sublane alignment)."""
+    return (x + m - 1) // m * m
+
+
+def validate_tile_m(tile_m: Optional[int]) -> None:
+    """Shared tile_m validation (TilePolicy, GreedySpec, DPPRerankConfig,
+    dpp_greedy_sharded all accept the knob): a positive LANE multiple."""
+    if tile_m is not None and (tile_m < LANE or tile_m % LANE != 0):
+        raise ValueError(
+            f"tile_m must be a positive multiple of the {LANE}-lane "
+            f"register width, got {tile_m}"
+        )
+
+
+def untiled_vmem_bytes(D: int, M: int, state_rows: int) -> int:
+    """Whole-array (resident-mode) VMEM working set.
+
+    ``V`` (D, M) + ``C`` (state_rows, M) + a few (1, M) rows, all f32,
+    padded to the (SUBLANE, LANE) f32 tile.  ``state_rows`` is ``k``
+    (full slate) or ``w`` (windowed).
+    """
+    Mp, Dp = round_up(M, LANE), round_up(D, SUBLANE)
+    return 4 * (Dp * Mp + round_up(state_rows, SUBLANE) * Mp + 8 * Mp)
+
+
+def tile_vmem_bytes(
+    D: int, tile_m: int, state_rows: int, windowed: bool = False
+) -> int:
+    """Per-grid-step VMEM working set of the tiled streaming kernels.
+
+    Counts the double-buffered streams (x2: while tile ``i`` computes,
+    the pipeline prefetches tile ``i+1`` and drains tile ``i-1``):
+    the ``V`` tile (D, tile_m), the Cholesky tile in (state_rows,
+    tile_m), the written-back tile (the full (state_rows, tile_m)
+    post-eviction state when ``windowed``, a single appended row
+    otherwise) and the d2 tile in/out; plus the small per-step
+    replicated state (winner column, rotation coefficients, reduction
+    cells), which does not scale with ``tile_m``.
+    """
+    Dp = round_up(D, SUBLANE)
+    Rp = round_up(state_rows, SUBLANE)
+    out_rows = Rp if windowed else SUBLANE
+    streamed = Dp + Rp + out_rows + 2 * SUBLANE
+    small = 4 * (Dp + Rp + 4 * LANE)
+    return 4 * 2 * streamed * tile_m + small
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePolicy:
+    """How the dpp_greedy kernels use VMEM.
+
+    tile_m:
+        Explicit candidate-axis tile width (multiple of ``LANE``).
+        Forces the tiled streaming kernels even when the resident
+        kernels would fit — that is how tiled-vs-resident parity is
+        tested.  ``None`` picks automatically: resident when the whole
+        working set fits ``vmem_budget_bytes``, otherwise the widest
+        fitting tile.
+    vmem_budget_bytes:
+        The budget both models are checked against.
+    """
+
+    tile_m: Optional[int] = None
+    vmem_budget_bytes: int = VMEM_BUDGET_BYTES
+
+    def __post_init__(self):
+        validate_tile_m(self.tile_m)
+        if self.vmem_budget_bytes <= 0:
+            raise ValueError(
+                f"vmem_budget_bytes must be positive, got "
+                f"{self.vmem_budget_bytes}"
+            )
+
+    def auto_tile(self, D: int, state_rows: int, windowed: bool) -> int:
+        """Widest LANE-multiple tile whose working set fits the budget
+        (0 when even one lane-width tile does not fit)."""
+        lo = tile_vmem_bytes(D, LANE, state_rows, windowed)
+        if lo > self.vmem_budget_bytes:
+            return 0
+        per_lane = tile_vmem_bytes(D, 2 * LANE, state_rows, windowed) - lo
+        spare = self.vmem_budget_bytes - lo
+        tm = LANE * (1 + spare // max(per_lane, 1))
+        return min(tm, MAX_AUTO_TILE)
+
+    def decide(
+        self, D: int, M: int, state_rows: int, windowed: bool
+    ) -> tuple[str, Optional[int]]:
+        """-> ("resident", None) | ("tiled", tile_m) | ("jnp", None)."""
+        if self.tile_m is not None:
+            return "tiled", self.tile_m
+        if untiled_vmem_bytes(D, M, state_rows) <= self.vmem_budget_bytes:
+            return "resident", None
+        tm = self.auto_tile(D, state_rows, windowed)
+        if tm == 0:
+            return "jnp", None
+        return "tiled", min(tm, round_up(M, LANE))
+
+
+def vmem_bytes(D: int, M: int, state_rows: int) -> int:
+    """Deprecated alias for :func:`untiled_vmem_bytes`.
+
+    The whole-array working set no longer gates kernel dispatch — past
+    the budget the tiled streaming kernels run instead of the jnp
+    fallback, and their VMEM use is per *tile*
+    (:func:`tile_vmem_bytes`).  This shim forwards for one release.
+    """
+    warnings.warn(
+        "vmem_bytes is deprecated: the whole-array VMEM check no longer "
+        "gates dispatch (see TilePolicy). Use untiled_vmem_bytes for the "
+        "resident-mode working set or tile_vmem_bytes for the per-tile "
+        "model.",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return untiled_vmem_bytes(D, M, state_rows)

@@ -1,4 +1,11 @@
-"""Jitted wrapper: block-survivor kernel + final reduce; jnp fallback."""
+"""Jitted wrapper: block-survivor kernel + final reduce.
+
+Ragged candidate counts (``M`` not a multiple of ``block_m``, or
+``M < 2 * block_m``) no longer fall back to the jnp reference: the
+kernel pads ``emb`` up to the block multiple and masks the padded rows
+to ``-inf`` by global index, so the shortlist kernel survives any M.
+The jnp path remains reachable via ``force_jnp=True``.
+"""
 from __future__ import annotations
 
 import jax
@@ -18,7 +25,9 @@ def scored_topk(
 ):
     """Global top-c of ``emb @ query``: (vals (c,), idx (c,))."""
     M = emb.shape[0]
-    if force_jnp or M < 2 * min(block_m, M) or M % min(block_m, M) != 0:
+    if c > M:
+        raise ValueError(f"c={c} exceeds the candidate count M={M}")
+    if force_jnp:
         return scored_topk_ref(emb, query, c)
     bvals, bidx = scored_topk_kernel(
         emb, query, c=c, block_m=block_m, interpret=interpret

@@ -22,13 +22,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dpp_greedy.tiling import LANE, round_up as _round_up
 
-def _kernel(e_ref, q_ref, vals_ref, idx_ref, *, c: int, block_m: int):
-    """e_ref (BM, D), q_ref (1, D); vals/idx (1, C) per grid step."""
+
+def _kernel(e_ref, q_ref, vals_ref, idx_ref, *, c: int, block_m: int, m: int):
+    """e_ref (BM, D), q_ref (1, D); vals/idx (1, C) per grid step.
+
+    ``m`` is the unpadded candidate count: rows at global index >= m are
+    zero padding (ops.py pads ragged M up to a block multiple) and are
+    scored -inf so they can never survive the block top-c."""
     b = pl.program_id(0)
     e = e_ref[...].astype(jnp.float32)
     q = q_ref[...].astype(jnp.float32)  # (1, D)
     s = jnp.dot(e, q.T, preferred_element_type=jnp.float32)[:, 0]  # (BM,)
+    gid = jax.lax.broadcasted_iota(jnp.int32, (block_m, 1), 0)[:, 0]
+    s = jnp.where(gid + b * block_m < m, s, -jnp.inf)
     vals, idx = jax.lax.top_k(s, c)
     vals_ref[...] = vals[None, :]
     idx_ref[...] = (idx + b * block_m)[None, :].astype(jnp.int32)
@@ -42,13 +50,21 @@ def scored_topk_kernel(
     block_m: int = 8192,
     interpret: bool = True,
 ):
-    """emb (M, D), query (D,) -> (vals (nb, c), idx (nb, c)) block survivors."""
+    """emb (M, D), query (D,) -> (vals (nb, c), idx (nb, c)) block survivors.
+
+    Ragged M is handled by zero-padding emb up to the block multiple;
+    the kernel masks padded rows to -inf by global index, so survivors
+    are identical to the unpadded problem."""
     M, D = emb.shape
-    bm = min(block_m, M)
-    assert M % bm == 0 and c <= bm, (M, bm, c)
-    nb = M // bm
+    bm = _round_up(min(block_m, _round_up(M, LANE)), LANE)
+    bm = max(bm, _round_up(c, LANE))
+    Mp = _round_up(M, bm)
+    if Mp != M:
+        emb = jnp.pad(emb, ((0, Mp - M), (0, 0)))
+    assert Mp % bm == 0 and c <= bm, (M, bm, c)
+    nb = Mp // bm
     vals, idx = pl.pallas_call(
-        functools.partial(_kernel, c=c, block_m=bm),
+        functools.partial(_kernel, c=c, block_m=bm, m=M),
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((bm, D), lambda i: (i, 0)),

@@ -7,9 +7,12 @@ paper's fast greedy MAP (Algorithm 1) — all inside the jitted serve step.
 
 All greedy variants are reached through ``repro.core.greedy_map``:
 
-* ``use_kernel=True`` routes through the Pallas whole-slate-in-VMEM
-  kernel (interpret-mode on CPU); the default jnp path lowers through
-  XLA for the dry-run cells.
+* ``use_kernel=True`` routes through the Pallas kernels (interpret-mode
+  on CPU); the default jnp path lowers through XLA for the dry-run
+  cells.  Shortlists whose working set fits VMEM run the resident
+  whole-slate-in-VMEM kernel; past the budget the tiled streaming
+  kernels take over (``TilePolicy`` — there is no silent jnp fallback
+  at scale any more), and ``tile_m=`` pins the tile width explicitly.
 * ``window=w`` enforces diversity only against the last ``w`` picks
   (the NeurIPS'18 sliding-window variant, O(w M) per step) so the
   serving path can produce long diversified feeds — slates longer than
@@ -52,6 +55,8 @@ class DPPRerankConfig:
     window: Optional[int] = None  # sliding diversity window (None = exact)
     mesh: Optional[object] = None  # shard the candidate axis over this mesh
     axis_name: str = "data"  # mesh axis carrying the candidate shards
+    tile_m: Optional[int] = None  # Pallas candidate-axis tile (None = auto)
+    interpret: bool = True  # Pallas interpret mode (False on real TPU)
 
     def __post_init__(self):
         if self.slate_size <= 0:
@@ -67,6 +72,16 @@ class DPPRerankConfig:
                 "use_kernel (Pallas) and mesh (sharded) are mutually "
                 "exclusive rerank backends"
             )
+        if self.tile_m is not None:
+            from repro.kernels.dpp_greedy.tiling import validate_tile_m
+
+            validate_tile_m(self.tile_m)
+            if not self.use_kernel and self.mesh is None:
+                raise ValueError(
+                    "tile_m= tiles the Pallas kernels — it needs "
+                    "use_kernel=True or mesh= (the jnp backend would "
+                    "silently ignore it)"
+                )
 
     def greedy_spec(self) -> GreedySpec:
         if self.mesh is not None:
@@ -82,6 +97,8 @@ class DPPRerankConfig:
             eps=self.eps,
             mesh=self.mesh,
             axis_name=self.axis_name,
+            tile_m=self.tile_m,
+            interpret=self.interpret,
         )
 
 

@@ -11,7 +11,10 @@ but the candidate axis M is sharded over ``cfg.mesh``'s
 * greedy MAP runs through ``repro.core.sharded.dpp_greedy_sharded``:
   each device computes on only its (D, M/P) column shard of the scaled
   feature matrix ``V`` and its slice of the Cholesky ring state, with
-  one tiny argmax-allreduce + winner-broadcast per step.
+  one tiny argmax-allreduce + winner-broadcast per step; with
+  ``cfg.tile_m`` set the per-device update streams through the tiled
+  Pallas pass (``repro.kernels.dpp_greedy.tiled``), so even M/P shards
+  past the VMEM budget stay on the kernel path.
 
 A request batch of B users shares the mesh: ``scores (B, M)`` (features
 per-user ``(B, M, D)`` or shared ``(M, D)``) keeps the candidate axis
@@ -112,5 +115,7 @@ def sharded_rerank(
         window=cfg.window,
         eps=cfg.eps,
         mask=smask,
+        tile_m=cfg.tile_m,
+        interpret=cfg.interpret,
     )
     return res.indices.astype(jnp.int32), res.d_hist

@@ -5,8 +5,13 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import map_relevance, normalize_columns
-from repro.kernels.dpp_greedy import dpp_greedy, dpp_greedy_ref, vmem_bytes
-from repro.kernels.dpp_greedy.ops import VMEM_BUDGET_BYTES
+from repro.kernels.dpp_greedy import (
+    TilePolicy,
+    VMEM_BUDGET_BYTES,
+    dpp_greedy,
+    dpp_greedy_ref,
+    untiled_vmem_bytes,
+)
 
 
 def make_inputs(seed, B, D, M, alpha=2.0, dtype=jnp.float32):
@@ -74,10 +79,13 @@ def test_kernel_nonaligned_padding():
     np.testing.assert_array_equal(np.asarray(sel_k), np.asarray(sel_r))
 
 
-def test_vmem_fallback():
-    """Huge M falls back to the jnp path and still returns valid output."""
+def test_dispatch_past_gate_is_tiled_not_jnp():
+    """Huge M no longer falls back to jnp — TilePolicy dispatches the
+    tiled streaming kernels; the jnp path needs an explicit force_jnp."""
     B, D, M, k = 1, 8, 4096, 4
-    assert vmem_bytes(64, 1 << 20, 32) > 12 * 1024 * 1024
+    assert untiled_vmem_bytes(64, 1 << 20, 32) > VMEM_BUDGET_BYTES
+    mode, tile = TilePolicy().decide(64, 1 << 20, 32, windowed=False)
+    assert mode == "tiled" and tile is not None
     V = make_inputs(19, B, D, M)
     sel, _ = dpp_greedy(V, k, force_jnp=True)
     assert int((np.asarray(sel) >= 0).sum()) == k
@@ -167,8 +175,11 @@ def test_kernel_windowed_d_hist_parity_under_eviction():
 
 
 def test_kernel_windowed_vmem_budget_uses_window():
-    """The VMEM gate scales with w, not k: a long slate over a big M
-    fits only because the windowed state is (w, M)."""
+    """Resident-mode accounting scales with w, not k: a long slate over
+    a big M stays on the resident kernel only because the windowed
+    state is (w, M) — the full kernel's (k, M) state dispatches tiled."""
     D, M, k, w = 32, 8192, 512, 8
-    assert vmem_bytes(D, M, k) > VMEM_BUDGET_BYTES  # full kernel would spill
-    assert vmem_bytes(D, M, w) < VMEM_BUDGET_BYTES  # windowed state fits
+    assert untiled_vmem_bytes(D, M, k) > VMEM_BUDGET_BYTES
+    assert untiled_vmem_bytes(D, M, w) < VMEM_BUDGET_BYTES
+    assert TilePolicy().decide(D, M, k, windowed=False)[0] == "tiled"
+    assert TilePolicy().decide(D, M, w, windowed=True) == ("resident", None)

@@ -30,10 +30,29 @@ def test_scored_topk_sweep(M, D, c, bm, dtype):
     assert set(np.asarray(idx).tolist()) == set(np.asarray(ridx).tolist())
 
 
-def test_scored_topk_fallback_small():
+def test_scored_topk_small_runs_kernel():
+    """M < 2 * block_m used to fall back to jnp; the kernel now pads to
+    one block and masks the tail to -inf."""
     rng = np.random.default_rng(0)
     emb = jnp.asarray(rng.normal(size=(100, 8)), jnp.float32)
     q = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
     vals, idx = scored_topk(emb, q, c=5)
     rvals, ridx = scored_topk_ref(emb, q, 5)
     np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), rtol=1e-6)
+    assert (np.asarray(idx) < 100).all()  # padding never survives
+
+
+@pytest.mark.parametrize("M,c,bm", [(1000, 8, 256), (130, 64, 128),
+                                    (4097, 128, 1024)])
+def test_scored_topk_ragged_m(M, c, bm):
+    """Regression: M % block_m != 0 runs the kernel (padded, -inf-masked
+    tail) instead of the old jnp fallback, and matches the reference."""
+    rng = np.random.default_rng(M + c)
+    emb = jnp.asarray(rng.normal(size=(M, 16)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    vals, idx = scored_topk(emb, q, c=c, block_m=bm, interpret=True)
+    rvals, ridx = scored_topk_ref(emb, q, c)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals),
+                               rtol=1e-5, atol=1e-5)
+    assert set(np.asarray(idx).tolist()) == set(np.asarray(ridx).tolist())
+    assert (np.asarray(idx) < M).all()

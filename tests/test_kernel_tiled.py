@@ -1,0 +1,353 @@
+"""Tiled-vs-resident dpp_greedy kernel parity + TilePolicy dispatch.
+
+The tiled streaming kernels must select the identical slate (d_hist to
+~1 ulp) as the resident whole-in-VMEM kernels and the jnp oracle across
+tile sizes {M (single tile), M/2, 128}, ragged tails, masks, eps-stop
+and windowed eviction — and a config past the old VMEM gate must run
+the Pallas path (interpret mode here) instead of falling back to jnp.
+
+The CI tiled-matrix job sweeps extra tile widths through the
+``DPP_TILE_M`` env var (appended to the parametrized grid).
+
+The 8-device sharded tiled-local-update parity runs in a subprocess in
+the slow lane (same isolation contract as tests/test_distributed.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import GreedySpec, GreedySpecError, greedy_map, map_relevance
+from repro.kernels.dpp_greedy import (
+    TilePolicy,
+    VMEM_BUDGET_BYTES,
+    dpp_greedy,
+    dpp_greedy_ref,
+    tile_vmem_bytes,
+    untiled_vmem_bytes,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# extra tile width injected by the CI tiled-matrix job
+_ENV_TILES = (
+    [int(os.environ["DPP_TILE_M"])] if os.environ.get("DPP_TILE_M") else []
+)
+
+
+def _tiles(M):
+    """{M (single tile), M/2, 128} + the CI matrix tile, deduplicated."""
+    ts = {M, M // 2, 128, *_ENV_TILES}
+    return sorted(t for t in ts if t >= 128 and t % 128 == 0)
+
+
+def make_inputs(seed, B, D, M, alpha=2.0):
+    rng = np.random.default_rng(seed)
+    F = jnp.asarray(rng.normal(size=(B, D, M)), jnp.float32)
+    F = F / jnp.maximum(jnp.linalg.norm(F, axis=1, keepdims=True), 1e-12)
+    r = jnp.asarray(rng.uniform(size=(B, M)), jnp.float32)
+    return F * map_relevance(r, alpha)[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Tiled-vs-resident-vs-oracle parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [None, 6])
+@pytest.mark.parametrize("tile", _tiles(512))
+def test_tiled_matches_resident_and_ref(window, tile):
+    B, D, M, k = 2, 32, 512, 16
+    V = make_inputs(B + D + M + k + (window or 0), B, D, M)
+    mask = jnp.ones((B, M), bool)
+    sel_t, dh_t = dpp_greedy(V, k, window=window, tile_m=tile)
+    sel_res, dh_res = dpp_greedy(V, k, window=window)  # resident kernel
+    sel_r, dh_r = dpp_greedy_ref(V, mask, k, window=window)
+    np.testing.assert_array_equal(np.asarray(sel_t), np.asarray(sel_r))
+    np.testing.assert_array_equal(np.asarray(sel_t), np.asarray(sel_res))
+    np.testing.assert_allclose(
+        np.asarray(dh_t), np.asarray(dh_r), rtol=3e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(dh_t), np.asarray(dh_res), rtol=1e-6, atol=1e-7
+    )
+
+
+@pytest.mark.parametrize("window", [None, 5])
+def test_tiled_ragged_tail_and_mask(window):
+    """M not a multiple of the tile (padded, masked tail) + a user mask:
+    padding can never be selected and the slate matches the oracle."""
+    B, D, M, k = 2, 19, 413, 12
+    V = make_inputs(17 + (window or 0), B, D, M)
+    rng = np.random.default_rng(3)
+    mask = jnp.asarray(rng.uniform(size=(B, M)) > 0.3)
+    sel_t, dh_t = dpp_greedy(V, k, mask=mask, window=window, tile_m=128)
+    sel_r, dh_r = dpp_greedy_ref(V, mask, k, window=window)
+    np.testing.assert_array_equal(np.asarray(sel_t), np.asarray(sel_r))
+    np.testing.assert_allclose(
+        np.asarray(dh_t), np.asarray(dh_r), rtol=3e-4, atol=1e-5
+    )
+    for b in range(B):
+        valid = np.asarray(sel_t[b])
+        valid = valid[valid >= 0]
+        assert (valid < M).all()
+        assert np.asarray(mask[b])[valid].all()
+
+
+def test_tiled_eps_stop():
+    """Rank-deficient kernel: the tiled path stops exactly where the
+    oracle stops, and stays stopped across the remaining sweeps."""
+    B, D, M, k = 1, 6, 384, 16
+    V = make_inputs(13, B, D, M)
+    sel_t, dh_t = dpp_greedy(V, k, eps=1e-3, tile_m=128)
+    sel_r, dh_r = dpp_greedy_ref(V, jnp.ones((B, M), bool), k, eps=1e-3)
+    np.testing.assert_array_equal(np.asarray(sel_t), np.asarray(sel_r))
+    assert int((np.asarray(sel_t) >= 0).sum()) <= D + 2
+
+
+@pytest.mark.parametrize("w", [1, 3])
+def test_tiled_windowed_eviction_parity(w):
+    """Slates long enough that eviction moves the marginals: the tiled
+    windowed kernel pins the same d_hist convention (pre-eviction
+    selection marginal) as the jnp windowed path."""
+    from repro.core.windowed import dpp_greedy_windowed_lowrank
+
+    B, D, M, k = 1, 8, 256, 16
+    V = make_inputs(37, B, D, M, alpha=1.0)
+    _, dh_exact = dpp_greedy(V, k, tile_m=128)
+    sel_t, dh_t = dpp_greedy(V, k, window=w, tile_m=128)
+    assert not np.allclose(
+        np.asarray(dh_exact)[0, w:], np.asarray(dh_t)[0, w:], rtol=1e-4
+    ), "eviction never changed a marginal — the case is vacuous"
+    ref = dpp_greedy_windowed_lowrank(V[0], k, window=w, eps=1e-3)
+    np.testing.assert_array_equal(np.asarray(sel_t[0]), np.asarray(ref.indices))
+    np.testing.assert_allclose(
+        np.asarray(dh_t[0]), np.asarray(ref.d_hist), rtol=3e-4, atol=1e-6
+    )
+    s = np.asarray(sel_t)[0]
+    assert (s >= 0).all() and len(set(s.tolist())) == k  # no eps-stop here
+
+
+def test_tiled_unbounded_slate():
+    """Windowed + tiled: slate length beyond the kernel rank keeps
+    selecting with O(w * tile_m) VMEM per grid step."""
+    B, D, M, k, w = 1, 12, 256, 40, 6
+    V = make_inputs(29, B, D, M, alpha=1.0)
+    sel_e, _ = dpp_greedy(V, k, eps=1e-3, tile_m=128)
+    sel_w, _ = dpp_greedy(V, k, eps=1e-3, window=w, tile_m=128)
+    assert int((np.asarray(sel_e) >= 0).sum()) <= D + 3
+    s = np.asarray(sel_w)[0]
+    assert (s >= 0).all() and len(set(s.tolist())) == k
+
+
+# ---------------------------------------------------------------------------
+# The acceptance bar: past the old VMEM gate, the kernel path runs
+# ---------------------------------------------------------------------------
+
+
+def test_past_gate_runs_kernel_and_matches_oracle():
+    """D=64, M=131072, w=8 exceeds the whole-array VMEM budget — the old
+    gate silently fell back to jnp here.  TilePolicy must now dispatch
+    the tiled Pallas kernels (interpret mode on CPU) and the slate must
+    be identical to the jnp oracle.  k > w so the *windowed* tiled
+    kernel (eviction included) is the one exercised past the gate."""
+    B, D, M, k, w = 1, 64, 131072, 16, 8
+    assert untiled_vmem_bytes(D, M, w) > VMEM_BUDGET_BYTES
+    mode, tm = TilePolicy().decide(D, M, w, windowed=True)
+    assert mode == "tiled" and tm is not None
+    assert tile_vmem_bytes(D, tm, w, windowed=True) <= VMEM_BUDGET_BYTES
+    V = make_inputs(19, B, D, M)
+    sel_t, dh_t = dpp_greedy(V, k, window=w, eps=1e-6, interpret=True)
+    sel_r, dh_r = dpp_greedy_ref(V, jnp.ones((B, M), bool), k, window=w,
+                                 eps=1e-6)
+    np.testing.assert_array_equal(np.asarray(sel_t), np.asarray(sel_r))
+    np.testing.assert_allclose(
+        np.asarray(dh_t), np.asarray(dh_r), rtol=3e-4, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# TilePolicy / dispatch plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_tile_policy_decides():
+    # comfortably in budget -> resident
+    assert TilePolicy().decide(64, 4096, 16, False) == ("resident", None)
+    # past budget -> tiled with a fitting, lane-aligned tile
+    mode, tm = TilePolicy().decide(64, 1 << 20, 16, False)
+    assert mode == "tiled" and tm % 128 == 0
+    assert tile_vmem_bytes(64, tm, 16, False) <= VMEM_BUDGET_BYTES
+    # explicit tile_m forces tiling even when resident would fit
+    assert TilePolicy(tile_m=128).decide(16, 256, 4, False) == ("tiled", 128)
+    # pathological row count: even one lane tile exceeds the budget
+    assert TilePolicy().decide(200_000, 1 << 20, 16, False) == ("jnp", None)
+
+
+def test_tile_policy_validation():
+    with pytest.raises(ValueError, match="tile_m"):
+        TilePolicy(tile_m=100)
+    with pytest.raises(ValueError, match="tile_m"):
+        TilePolicy(tile_m=-128)
+    with pytest.raises(ValueError, match="vmem_budget_bytes"):
+        TilePolicy(vmem_budget_bytes=0)
+    with pytest.raises(ValueError, match="at most one"):
+        dpp_greedy(
+            jnp.ones((1, 4, 128)), 2, tile_m=128, tile_policy=TilePolicy()
+        )
+
+
+def test_vmem_bytes_deprecation_shim():
+    from repro.kernels.dpp_greedy import vmem_bytes
+
+    with pytest.warns(DeprecationWarning, match="no longer gates"):
+        legacy = vmem_bytes(64, 4096, 16)
+    assert legacy == untiled_vmem_bytes(64, 4096, 16)
+
+
+def test_greedy_spec_tile_m_validation_and_threading():
+    with pytest.raises(GreedySpecError, match="tile_m"):
+        GreedySpec(k=4, tile_m=100)
+    with pytest.raises(GreedySpecError, match="tile_m"):
+        GreedySpec(k=4, backend="jnp", tile_m=128)
+    # backend='auto' without a mesh resolves to jnp, which would also
+    # silently ignore the tile — rejected at construction
+    with pytest.raises(GreedySpecError, match="tile_m"):
+        GreedySpec(k=4, tile_m=128)
+    V = make_inputs(41, 1, 16, 384)[0]
+    ref = greedy_map(GreedySpec(k=8, backend="jnp", eps=1e-6), V=V)
+    got = greedy_map(
+        GreedySpec(k=8, backend="pallas", eps=1e-6, tile_m=128), V=V
+    )
+    np.testing.assert_array_equal(np.asarray(ref.indices),
+                                  np.asarray(got.indices))
+
+
+def test_rerank_config_tile_m():
+    from repro.serving.reranker import DPPRerankConfig, rerank
+
+    with pytest.raises(ValueError, match="tile_m"):
+        DPPRerankConfig(tile_m=100, use_kernel=True)
+    with pytest.raises(ValueError, match="tile_m"):
+        DPPRerankConfig(tile_m=128)  # jnp backend would ignore it
+    rng = np.random.default_rng(43)
+    M, D = 400, 16
+    scores = jnp.asarray(rng.uniform(size=M), jnp.float32)
+    feats = jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
+    feats = feats / jnp.linalg.norm(feats, axis=1, keepdims=True)
+    kw = dict(slate_size=10, shortlist=256, eps=1e-6)
+    base, _ = rerank(scores, feats, DPPRerankConfig(**kw))
+    tiled, _ = rerank(
+        scores, feats, DPPRerankConfig(use_kernel=True, tile_m=128, **kw)
+    )
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(tiled))
+
+
+# ---------------------------------------------------------------------------
+# Sharded local update through the tiled kernel (fast: 1-device mesh)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_sharded_tiled_local_update_one_device(window):
+    from repro.core import dpp_greedy_lowrank, dpp_greedy_sharded
+    from repro.core.windowed import dpp_greedy_windowed_lowrank
+    from repro.distributed.context import make_mesh_compat
+
+    rng = np.random.default_rng(45)
+    M, D, k = 300, 24, 12
+    V = jnp.asarray(rng.normal(size=(D, M)), jnp.float32) / np.sqrt(D)
+    mask = jnp.asarray(rng.uniform(size=M) > 0.3)
+    mesh = make_mesh_compat((1,), ("data",))
+    if window is None:
+        ref = dpp_greedy_lowrank(V, k, eps=1e-6, mask=mask)
+    else:
+        ref = dpp_greedy_windowed_lowrank(V, k, window=window, eps=1e-6,
+                                          mask=mask)
+    got = dpp_greedy_sharded(
+        V, k, mesh=mesh, window=window, eps=1e-6, mask=mask, tile_m=128
+    )
+    np.testing.assert_array_equal(np.asarray(ref.indices),
+                                  np.asarray(got.indices))
+    np.testing.assert_allclose(np.asarray(ref.d_hist), np.asarray(got.d_hist),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_sharded_tiled_batched_one_device():
+    """The batched sharded path vmaps the SPMD body — the tiled Pallas
+    pass inside must batch correctly (vmap-of-pallas_call)."""
+    from repro.core import dpp_greedy_lowrank_batch, dpp_greedy_sharded
+    from repro.distributed.context import make_mesh_compat
+
+    rng = np.random.default_rng(46)
+    B, D, M, k = 3, 12, 200, 8
+    V = jnp.asarray(rng.normal(size=(B, D, M)), jnp.float32) / np.sqrt(D)
+    mask = jnp.asarray(rng.uniform(size=(B, M)) > 0.3)
+    mesh = make_mesh_compat((1,), ("data",))
+    ref = dpp_greedy_lowrank_batch(V, k, 1e-6, mask)
+    got = dpp_greedy_sharded(V, k, mesh=mesh, eps=1e-6, mask=mask, tile_m=128)
+    np.testing.assert_array_equal(np.asarray(ref.indices),
+                                  np.asarray(got.indices))
+
+
+# ---------------------------------------------------------------------------
+# Sharded tiled local update, 8 devices (subprocess, slow lane)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_tiled_multidevice_parity():
+    """On an 8-host-device mesh, the sharded path with tile_m set (every
+    device's local update streamed through the tiled Pallas pass) selects
+    the identical slate as the single-device low-rank paths — exact and
+    windowed, ragged M (padded to P * tile_m), masked, batched."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import numpy as np, jax, jax.numpy as jnp
+            from repro.core import (dpp_greedy_sharded, dpp_greedy_lowrank,
+                                    dpp_greedy_lowrank_batch)
+            from repro.core.windowed import dpp_greedy_windowed_lowrank
+            from repro.distributed.context import make_mesh_compat
+            assert jax.device_count() == 8
+            mesh = make_mesh_compat((8,), ("data",))
+            rng = np.random.default_rng(0)
+            M, D, k = 3001, 16, 12  # not divisible by 8*128 (padded shards)
+            V = jnp.asarray(rng.normal(size=(D, M)), jnp.float32) / np.sqrt(D)
+            mask = jnp.asarray(rng.uniform(size=M) > 0.2)
+            for window in (None, 1, 5):
+                for m in (None, mask):
+                    if window is None:
+                        ref = dpp_greedy_lowrank(V, k, eps=1e-6, mask=m)
+                    else:
+                        ref = dpp_greedy_windowed_lowrank(
+                            V, k, window=window, eps=1e-6, mask=m)
+                    got = dpp_greedy_sharded(
+                        V, k, mesh=mesh, window=window, eps=1e-6, mask=m,
+                        tile_m=128)
+                    np.testing.assert_array_equal(
+                        np.asarray(ref.indices), np.asarray(got.indices))
+                    np.testing.assert_allclose(
+                        np.asarray(ref.d_hist), np.asarray(got.d_hist),
+                        rtol=1e-6, atol=1e-7)
+            B = 3
+            Vb = jnp.asarray(rng.normal(size=(B, D, M)), jnp.float32)
+            Vb = Vb / np.sqrt(D)
+            mb = jnp.asarray(rng.uniform(size=(B, M)) > 0.3)
+            ref = dpp_greedy_lowrank_batch(Vb, 8, 1e-6, mb)
+            got = dpp_greedy_sharded(Vb, 8, mesh=mesh, eps=1e-6, mask=mb,
+                                     tile_m=128)
+            np.testing.assert_array_equal(
+                np.asarray(ref.indices), np.asarray(got.indices))
+            print("SHARDED-TILED-OK")
+        """)],
+        capture_output=True, text=True, timeout=600, env=env, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED-TILED-OK" in out.stdout
