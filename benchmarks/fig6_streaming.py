@@ -1,0 +1,176 @@
+"""Streaming slate emission: time-to-first-chunk vs whole-slate latency
+(beyond-paper; the serving shape the NeurIPS'18 sliding window exists
+for — repulsion only among nearby items means a long feed can start
+rendering after the first chunk instead of blocking on the whole
+slate).
+
+For a windowed long-slate config (N >> w) each backend serves the same
+request twice: once through whole-slate ``rerank`` and once through
+``rerank_stream`` with ``chunk_size`` items per chunk.  Reported per
+row: steady-state time-to-first-chunk (the headline number), the
+whole-slate latency it undercuts, the full-stream wall clock (the
+price of chunking), and a parity flag — the concatenated chunks must
+equal the whole slate index for index, checked every run and failed
+red on mismatch.
+
+The pallas row additionally counts the fused multi-step chunk kernel's
+``pallas_call`` invocations (``fused_calls_per_chunk``): the chunked
+path must make **one** call — one HBM C/d2 round-trip — per chunk,
+not one per step (the ROADMAP's sweep-fusion headroom; see
+``repro.kernels.dpp_greedy.tiled``).
+
+Interpret mode on CPU measures structure, not the TPU win: the
+time-to-first-chunk < whole-slate ordering is asserted (it reflects
+executing ``chunk`` greedy steps instead of N before first emission),
+the absolute ratios are not.
+
+  PYTHONPATH=src python -m benchmarks.fig6_streaming [--smoke | --full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.serving.reranker import DPPRerankConfig, rerank, rerank_stream
+
+
+def setup(M, D, seed=0):
+    rng = np.random.default_rng(seed)
+    feats = rng.normal(size=(M, D)).astype(np.float32)
+    feats /= np.maximum(np.linalg.norm(feats, axis=1, keepdims=True), 1e-12)
+    scores = rng.uniform(size=M).astype(np.float32)
+    return jnp.asarray(scores), jnp.asarray(feats)
+
+
+def time_whole(scores, feats, cfg, trials):
+    rerank(scores, feats, cfg)[0].block_until_ready()  # compile + warm
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        slate, _ = rerank(scores, feats, cfg)
+        slate.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best, np.asarray(slate)
+
+
+def time_stream(scores, feats, cfg, trials):
+    for c, _ in rerank_stream(scores, feats, cfg):  # compile + warm
+        c.block_until_ready()
+    best_first = best_total = float("inf")
+    for _ in range(trials):
+        chunks = []
+        t0 = time.perf_counter()
+        t_first = None
+        for c, _ in rerank_stream(scores, feats, cfg):
+            c.block_until_ready()
+            if t_first is None:
+                t_first = time.perf_counter() - t0
+            chunks.append(np.asarray(c))
+        best_total = min(best_total, time.perf_counter() - t0)
+        best_first = min(best_first, t_first)
+    return best_first, best_total, np.concatenate(chunks)
+
+
+def count_fused_calls(scores, feats, cfg):
+    """HBM C/d2 round-trips per chunk on the fused streaming path,
+    counted structurally: trace one chunk advance and count its
+    pallas_call eqns with ``tiled.pallas_call_structure``.  The fused
+    path must show exactly one, not under any loop — one kernel launch
+    (one C/d2 round-trip) per chunk, however many steps the chunk
+    spans."""
+    from repro.kernels.dpp_greedy.tiled import pallas_call_structure
+    from repro.serving.reranker import _shortlist_kernel
+    from repro.core.streaming import greedy_chunk, greedy_init
+
+    spec = cfg.greedy_spec()
+    V, m_top, _ = _shortlist_kernel(scores, feats, cfg, mask=None)
+    state = greedy_init(spec, V=V, mask=m_top)
+    jaxpr = jax.make_jaxpr(
+        lambda s, v: greedy_chunk(spec, s, V=v,
+                                  chunk_size=cfg.chunk_size)
+    )(state, V)
+    counts = pallas_call_structure(jaxpr)
+    if counts["looped"]:
+        return float("inf")  # a per-step launch survived inside a loop
+    return float(counts["flat"])
+
+
+def run(M, D, N, w, chunk, trials):
+    scores, feats = setup(M, D)
+    base = dict(slate_size=N, shortlist=M, alpha=3.0, eps=1e-6, window=w,
+                chunk_size=chunk)
+    rows = []
+    for name, extra in [
+        ("jnp", {}),
+        ("pallas_tiled", dict(use_kernel=True, tile_m=128)),
+    ]:
+        cfg = DPPRerankConfig(**base, **extra)
+        # whole-slate latency: measure the UNCHUNKED path (chunk_size
+        # also switches greedy_map to chunked execution, which is the
+        # streaming path's cost, not the blocking baseline's)
+        whole_cfg = DPPRerankConfig(
+            **{**base, "chunk_size": None}, **extra
+        )
+        t_whole, slate = time_whole(scores, feats, whole_cfg, trials)
+        t_first, t_total, streamed = time_stream(scores, feats, cfg, trials)
+        parity = "ok" if np.array_equal(slate, streamed) else "FAIL"
+        fused = (
+            count_fused_calls(scores, feats, cfg)
+            if extra.get("use_kernel") else 0.0
+        )
+        rows.append(
+            (name, M, D, N, w, chunk, t_first, t_whole, t_total, fused,
+             parity)
+        )
+    return rows
+
+
+def main(fast_mode=False):
+    # N >> chunk and M large enough that per-step compute (not per-call
+    # dispatch overhead) dominates: time-to-first-chunk then has a
+    # structural margin over the whole slate (c of N steps) that
+    # survives noisy CI runners
+    M, D, N, w, chunk = (
+        (2048, 32, 64, 8, 8) if fast_mode else (2048, 32, 96, 8, 8)
+    )
+    trials = 2 if fast_mode else 5
+    rows = run(M, D, N, w, chunk, trials)
+    print("name,us_per_call,derived")
+    for (name, M_, D_, N_, w_, c_, t_first, t_whole, t_total, fused,
+         parity) in rows:
+        print(
+            f"fig6_stream_{name}_M{M_}_N{N_},{t_first*1e6:.1f},"
+            f"whole_us={t_whole*1e6:.1f};stream_total_us={t_total*1e6:.1f};"
+            f"first_chunk_vs_whole={t_first/max(t_whole, 1e-12):.2f}x;"
+            f"chunk={c_};w={w_};fused_calls_per_chunk={fused:.1f};"
+            f"parity={parity}"
+        )
+    bad = [r for r in rows if r[10] != "ok"]
+    if bad:
+        raise RuntimeError(f"fig6 streamed-vs-whole parity failure: {bad}")
+    slow = [r for r in rows if not r[6] < r[7]]
+    if slow:
+        raise RuntimeError(
+            f"fig6: time-to-first-chunk did not beat whole-slate latency: "
+            f"{slow}"
+        )
+    fused_bad = [r for r in rows if r[0].startswith("pallas") and r[9] > 1]
+    if fused_bad:
+        raise RuntimeError(
+            f"fig6: fused streaming made more than one pallas_call per "
+            f"chunk: {fused_bad}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 2 timing trials (CI)")
+    args = ap.parse_args()
+    main(fast_mode=args.smoke or not args.full)

@@ -24,6 +24,7 @@ def main() -> None:
         fig3_tradeoff,
         fig4_windowed,
         fig5_sharded,
+        fig6_streaming,
     )
 
     print("# Figure 1: original greedy MAP vs Div-DPP (speedup, exactness)")
@@ -36,6 +37,8 @@ def main() -> None:
     fig4_windowed.main(fast_mode=fast)
     print("# Figure 5: sharded candidate-axis greedy, M/P fixed (weak scaling)")
     fig5_sharded.main(fast_mode=fast)
+    print("# Figure 6: streaming slate emission, time-to-first-chunk vs whole")
+    fig6_streaming.main(fast_mode=fast)
 
     print("# Roofline (from dry-run artifacts, if present)")
     try:

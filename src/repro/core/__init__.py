@@ -27,8 +27,19 @@ from repro.core.windowed import (
     dpp_greedy_windowed_lowrank_batch,
     dpp_greedy_windowed_rebuild,
 )
-from repro.core.dispatch import GreedySpec, GreedySpecError, greedy_map
+from repro.core.dispatch import (
+    GreedySpec,
+    GreedySpecError,
+    greedy_map,
+    greedy_map_chunks,
+)
 from repro.core.sharded import dpp_greedy_sharded, sharded_topk
+from repro.core.streaming import (
+    GreedyState,
+    greedy_chunk,
+    greedy_init,
+    greedy_step,
+)
 from repro.core.greedy_naive import greedy_map_naive
 from repro.core.baselines import (
     greedy_avg_select,
@@ -47,7 +58,12 @@ __all__ = [
     "GreedyResult",
     "GreedySpec",
     "GreedySpecError",
+    "GreedyState",
     "greedy_map",
+    "greedy_map_chunks",
+    "greedy_init",
+    "greedy_step",
+    "greedy_chunk",
     "dpp_greedy_sharded",
     "sharded_topk",
     "dpp_greedy_windowed",

@@ -28,6 +28,21 @@ Dispatch rules:
   they fit VMEM and tiles past that); on the sharded backend each
   device's local per-step update reuses the same tiled kernel on its
   (D, M/P) shard.
+* ``spec.chunk_size`` — greedy steps per resumable chunk.  On the
+  pallas backend ``greedy_map`` then runs the slate as fused multi-step
+  chunk kernels (one pallas_call — one HBM C/d2 round-trip — per
+  chunk, the ROADMAP's sweep-fusion headroom); on the sharded backend
+  the slate advances chunk-by-chunk with the loop state staying
+  device-resident between chunks.  Both produce the identical slate to
+  unchunked execution.  The pure-jnp whole-slate path has no chunked
+  execution, so ``chunk_size`` with ``backend='jnp'`` (or ``'auto'``
+  without a mesh) is rejected at construction — mirroring the
+  ``tile_m`` rule; jnp *streaming* passes ``chunk_size=`` to
+  ``greedy_map_chunks`` directly instead.
+
+``greedy_map_chunks`` is the streaming front door: a generator yielding
+per-chunk ``GreedyResult``s whose concatenation is exactly the
+whole-slate ``greedy_map`` result (see ``repro.core.streaming``).
 
 ``GreedySpec`` validates itself at construction — a bad config raises
 ``GreedySpecError`` (a ``ValueError``) at spec-build time instead of
@@ -73,12 +88,29 @@ class GreedySpec:
     mesh: Optional[object] = None  # jax Mesh for the sharded backend
     axis_name: str = "data"  # mesh axis the candidate axis shards over
     tile_m: Optional[int] = None  # Pallas candidate-axis tile (None = auto)
+    chunk_size: Optional[int] = None  # greedy steps per resumable chunk
 
     def __post_init__(self):
         if self.k <= 0:
             raise GreedySpecError(f"k must be >= 1, got {self.k}")
         if self.window is not None and self.window < 1:
             raise GreedySpecError(f"window must be >= 1, got {self.window}")
+        if self.chunk_size is not None:
+            if self.chunk_size < 1:
+                raise GreedySpecError(
+                    f"chunk_size must be >= 1, got {self.chunk_size}"
+                )
+            if self.backend == "jnp" or (
+                self.backend == "auto" and self.mesh is None
+            ):
+                raise GreedySpecError(
+                    "chunk_size= selects chunked execution, which only the "
+                    "pallas (fused multi-step chunk kernels) and sharded "
+                    "(device-resident chunk state) backends implement — on "
+                    "the jnp whole-slate path it would be silently ignored; "
+                    "stream through greedy_map_chunks(..., chunk_size=) "
+                    "instead"
+                )
         if self.tile_m is not None:
             from repro.kernels.dpp_greedy.tiling import validate_tile_m
 
@@ -151,6 +183,16 @@ def greedy_map(
         # pallas kernel reshapes to (B, 1, M)), so broadcast here once
         mask = jnp.broadcast_to(mask, (kern.shape[0], mask.shape[0]))
 
+    if spec.chunk_size is not None:
+        # chunked whole-slate execution (pallas: fused multi-step chunk
+        # kernels; sharded: device-resident chunk state) — identical
+        # slate to the unchunked paths, validated by tests/test_streaming
+        chunks = list(greedy_map_chunks(spec, L=L, V=V, mask=mask))
+        sel = jnp.concatenate([c.indices for c in chunks], axis=-1)
+        dh = jnp.concatenate([c.d_hist for c in chunks], axis=-1)
+        n = jnp.sum(sel >= 0, axis=-1).astype(jnp.int32)
+        return GreedyResult(sel, n, dh)
+
     if spec.sharded():
         if L is not None:
             raise ValueError(
@@ -210,3 +252,54 @@ def greedy_map(
         return fn(V, spec.k, spec.window, spec.eps, mask)
     fn = dpp_greedy_lowrank_batch if batched else dpp_greedy_lowrank
     return fn(V, spec.k, spec.eps, mask)
+
+
+def greedy_map_chunks(
+    spec: GreedySpec,
+    *,
+    L: Optional[jnp.ndarray] = None,
+    V: Optional[jnp.ndarray] = None,
+    mask: Optional[jnp.ndarray] = None,
+    chunk_size: Optional[int] = None,
+):
+    """Generator running greedy MAP per ``spec`` in resumable chunks.
+
+    Yields ``ceil(k / chunk)`` :class:`GreedyResult`s whose ``indices``
+    / ``d_hist`` cover ``chunk`` selections each (the last chunk is
+    short when ``chunk`` does not divide ``k``); their concatenation is
+    exactly the whole-slate ``greedy_map`` result — indices
+    index-for-index, ``d_hist`` bitwise on jnp and to ~1 ulp across
+    kernels.  After an eps-stop the remaining slots hold -1 / 0, as the
+    whole-slate tail does.
+
+    ``chunk_size`` overrides ``spec.chunk_size`` — that is how the jnp
+    backend (whose spec cannot carry a chunk size, see ``GreedySpec``)
+    streams.  Backends: jnp takes single problems (dense L or low-rank
+    V); pallas and sharded take single or batched low-rank V.
+    """
+    from repro.core.streaming import greedy_chunk, greedy_init, resolve_chunk
+
+    chunk = resolve_chunk(spec, chunk_size)
+    kern = L if L is not None else V
+    if mask is not None and kern is not None and kern.ndim == 3 \
+            and mask.ndim == 1:
+        mask = jnp.broadcast_to(mask, (kern.shape[0], mask.shape[0]))
+    state = greedy_init(spec, L=L, V=V, mask=mask)
+    # pad/cast the kernel operand to the state's padded geometry ONCE —
+    # the chunk executors skip their copy when the shape already
+    # matches, so the loop below moves no O(D M) data per chunk
+    if spec.sharded():
+        from repro.core.sharded import _stream_pad
+
+        V = _stream_pad(V, state.d2.shape[-1])
+    elif spec.backend == "pallas":
+        from repro.kernels.dpp_greedy import dpp_greedy_stream_pad
+
+        V = dpp_greedy_stream_pad(V, state)
+    done = 0
+    while done < spec.k:
+        c = min(chunk, spec.k - done)
+        state, sel, dh = greedy_chunk(spec, state, L=L, V=V, chunk_size=c)
+        n = jnp.sum(sel >= 0, axis=-1).astype(jnp.int32)
+        yield GreedyResult(sel, n, dh)
+        done += c

@@ -51,6 +51,32 @@ class GreedyResult(NamedTuple):
     d_hist: jnp.ndarray
 
 
+def greedy_step_exact(row_fn, t, c, d2, stopped, eps2):
+    """One step of Algorithm 1 on the column-layout state ``c (M, k)``.
+
+    Factored out of the ``_greedy_loop`` fori body so the whole-slate
+    loop and the chunked/resumable executors in ``repro.core.streaming``
+    run the *identical* op sequence — streamed chunks concatenate
+    bitwise to the whole-slate result.  ``t`` is the absolute step
+    index (the column of ``c`` the new Cholesky row lands in).
+
+    Returns ``(c, d2, stopped, j, dj)``.
+    """
+    j = jnp.argmax(d2)
+    dj2 = d2[j]
+    # Stop rule (eq. 20): d_j <= eps  <=>  d_j^2 <= eps^2 (d_j >= 0).
+    stopped = stopped | (dj2 <= eps2)
+    dj = jnp.sqrt(jnp.maximum(dj2, eps2))  # guarded; unused when stopped
+    # Update (eqs. 16-18): e = (L_j - c c_j) / d_j.
+    e = (row_fn(j) - c @ c[j]) / dj
+    e = jnp.where(stopped, jnp.zeros_like(e), e)
+    c = c.at[:, t].set(e)
+    d2_next = d2 - e * e
+    d2_next = d2_next.at[j].set(NEG_INF)  # remove j from candidates
+    d2 = jnp.where(stopped, d2, d2_next)
+    return c, d2, stopped, j, dj
+
+
 def _greedy_loop(diag, row_fn, k: int, eps: float, mask):
     """Shared greedy loop.
 
@@ -70,18 +96,9 @@ def _greedy_loop(diag, row_fn, k: int, eps: float, mask):
 
     def body(t, state):
         c, d2, sel, d_hist, stopped = state
-        j = jnp.argmax(d2)
-        dj2 = d2[j]
-        # Stop rule (eq. 20): d_j <= eps  <=>  d_j^2 <= eps^2 (d_j >= 0).
-        stopped = stopped | (dj2 <= eps2)
-        dj = jnp.sqrt(jnp.maximum(dj2, eps2))  # guarded; unused when stopped
-        # Update (eqs. 16-18): e = (L_j - c c_j) / d_j.
-        e = (row_fn(j) - c @ c[j]) / dj
-        e = jnp.where(stopped, jnp.zeros_like(e), e)
-        c = c.at[:, t].set(e)
-        d2_next = d2 - e * e
-        d2_next = d2_next.at[j].set(NEG_INF)  # remove j from candidates
-        d2 = jnp.where(stopped, d2, d2_next)
+        c, d2, stopped, j, dj = greedy_step_exact(
+            row_fn, t, c, d2, stopped, eps2
+        )
         sel = sel.at[t].set(jnp.where(stopped, -1, j))
         d_hist = d_hist.at[t].set(jnp.where(stopped, 0.0, dj))
         return c, d2, sel, d_hist, stopped

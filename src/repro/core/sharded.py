@@ -98,6 +98,59 @@ def _bcast_from_owner(parts, owner, axis_name):
     return jax.lax.psum(jnp.where(owner, z, jnp.zeros_like(z)), axis_name)
 
 
+def _exact_step_fn(
+    eps: float, axis_name: str,
+    tile_m: Optional[int] = None, interpret: bool = True,
+):
+    """Per-step body of sharded Algorithm 1, factored out so the
+    whole-slate loop and the chunked streaming executor run the
+    identical op sequence (streamed chunks concatenate exactly to the
+    whole-slate slate).
+
+    Returns ``step(t, Vl, ax, off, C, d2, stopped) ->
+    (C, d2, stopped, j, dj)``; the jnp flavor keeps the column layout
+    ``C (Mloc, k)``, the tiled flavor the row layout ``(k, Mloc)`` the
+    Pallas pass streams."""
+
+    def step_tiled(t, Vl, ax, off, C, d2, stopped):
+        from repro.kernels.dpp_greedy.tiled import tiled_update_exact
+
+        D = Vl.shape[0]
+        eps2 = jnp.asarray(eps, Vl.dtype) ** 2
+        jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
+        stopped = stopped | (dj2 <= eps2)
+        dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+        # winner broadcast: V[:, j] and its Cholesky column c_j
+        z = _bcast_from_owner((Vl[:, jl], C[:, jl]), owner, axis_name)
+        vj, cj = z[:D], z[D:]
+        e, d2 = tiled_update_exact(
+            Vl, C, d2, vj, cj, dj, stopped, j, off,
+            tile_m=tile_m, interpret=interpret,
+        )
+        C = C.at[t].set(e)
+        return C, d2, stopped, j, dj
+
+    def step(t, Vl, ax, off, C, d2, stopped):
+        D = Vl.shape[0]
+        eps2 = jnp.asarray(eps, Vl.dtype) ** 2
+        jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
+        stopped = stopped | (dj2 <= eps2)
+        dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+        # winner broadcast: V[:, j] and its Cholesky column c_j
+        z = _bcast_from_owner((Vl[:, jl], C[jl, :]), owner, axis_name)
+        vj, cj = z[:D], z[D:]
+        # local shard of the update (eqs. 16-18): e = (L_j - c c_j) / d_j
+        e = (vj @ Vl - C @ cj) / dj
+        e = jnp.where(stopped, jnp.zeros_like(e), e)
+        C = C.at[:, t].set(e)
+        d2_next = d2 - e * e
+        d2_next = d2_next.at[jl].set(jnp.where(owner, NEG_INF, d2_next[jl]))
+        d2 = jnp.where(stopped, d2, d2_next)
+        return C, d2, stopped, j, dj
+
+    return step_tiled if tile_m is not None else step
+
+
 def _exact_body(
     k: int, eps: float, axis_name: str,
     tile_m: Optional[int] = None, interpret: bool = True,
@@ -112,76 +165,27 @@ def _exact_body(
     global column offset makes the winner masking land on the owner —
     so an M/P shard past the VMEM budget streams in double-buffered
     tiles instead of lowering through unfused jnp."""
-
-    def body_fn_tiled(Vl, maskl):
-        from repro.kernels.dpp_greedy.tiled import tiled_update_exact
-
-        D, Mloc = Vl.shape
-        dtype = Vl.dtype
-        eps2 = jnp.asarray(eps, dtype) ** 2
-        ax = jax.lax.axis_index(axis_name)
-        off = ax.astype(jnp.int32) * Mloc
-
-        diag = jnp.sum(Vl * Vl, axis=0)
-        d2 = jnp.where(maskl, diag, NEG_INF)
-        # row layout (k, Mloc) — the tiled pass streams C in
-        # (rows, tile_m) blocks alongside V
-        C = jnp.zeros((k, Mloc), dtype)
-        sel = jnp.full((k,), -1, jnp.int32)
-        d_hist = jnp.zeros((k,), dtype)
-
-        def body(t, state):
-            C, d2, sel, d_hist, stopped = state
-            jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
-            stopped = stopped | (dj2 <= eps2)
-            dj = jnp.sqrt(jnp.maximum(dj2, eps2))
-            # winner broadcast: V[:, j] and its Cholesky column c_j
-            z = _bcast_from_owner((Vl[:, jl], C[:, jl]), owner, axis_name)
-            vj, cj = z[:D], z[D:]
-            e, d2 = tiled_update_exact(
-                Vl, C, d2, vj, cj, dj, stopped, j, off,
-                tile_m=tile_m, interpret=interpret,
-            )
-            C = C.at[t].set(e)
-            sel = sel.at[t].set(jnp.where(stopped, -1, j))
-            d_hist = d_hist.at[t].set(jnp.where(stopped, 0.0, dj))
-            return C, d2, sel, d_hist, stopped
-
-        state = (C, d2, sel, d_hist, jnp.asarray(False))
-        _, _, sel, d_hist, _ = jax.lax.fori_loop(0, k, body, state)
-        return sel, jnp.sum(sel >= 0).astype(jnp.int32), d_hist
+    step = _exact_step_fn(eps, axis_name, tile_m, interpret)
+    # row layout (k, Mloc) for the tiled pass, column layout (Mloc, k)
+    # for jnp — the latter kept so the reduction order (and therefore
+    # d_hist) stays bitwise identical to the single-device path
+    row_layout = tile_m is not None
 
     def body_fn(Vl, maskl):
-        D, Mloc = Vl.shape
+        Mloc = Vl.shape[1]
         dtype = Vl.dtype
-        eps2 = jnp.asarray(eps, dtype) ** 2
         ax = jax.lax.axis_index(axis_name)
         off = ax.astype(jnp.int32) * Mloc
 
         diag = jnp.sum(Vl * Vl, axis=0)
         d2 = jnp.where(maskl, diag, NEG_INF)
-        # column layout (Mloc, k), as in greedy_chol — kept so the jnp
-        # path's reduction order (and therefore d_hist) stays bitwise
-        # identical to the single-device implementation
-        C = jnp.zeros((Mloc, k), dtype)
+        C = jnp.zeros((k, Mloc) if row_layout else (Mloc, k), dtype)
         sel = jnp.full((k,), -1, jnp.int32)
         d_hist = jnp.zeros((k,), dtype)
 
         def body(t, state):
             C, d2, sel, d_hist, stopped = state
-            jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
-            stopped = stopped | (dj2 <= eps2)
-            dj = jnp.sqrt(jnp.maximum(dj2, eps2))
-            # winner broadcast: V[:, j] and its Cholesky column c_j
-            z = _bcast_from_owner((Vl[:, jl], C[jl, :]), owner, axis_name)
-            vj, cj = z[:D], z[D:]
-            # local shard of the update (eqs. 16-18): e = (L_j - c c_j) / d_j
-            e = (vj @ Vl - C @ cj) / dj
-            e = jnp.where(stopped, jnp.zeros_like(e), e)
-            C = C.at[:, t].set(e)
-            d2_next = d2 - e * e
-            d2_next = d2_next.at[jl].set(jnp.where(owner, NEG_INF, d2_next[jl]))
-            d2 = jnp.where(stopped, d2, d2_next)
+            C, d2, stopped, j, dj = step(t, Vl, ax, off, C, d2, stopped)
             sel = sel.at[t].set(jnp.where(stopped, -1, j))
             d_hist = d_hist.at[t].set(jnp.where(stopped, 0.0, dj))
             return C, d2, sel, d_hist, stopped
@@ -190,7 +194,7 @@ def _exact_body(
         _, _, sel, d_hist, _ = jax.lax.fori_loop(0, k, body, state)
         return sel, jnp.sum(sel >= 0).astype(jnp.int32), d_hist
 
-    return body_fn_tiled if tile_m is not None else body_fn
+    return body_fn
 
 
 def _windowed_body(
@@ -216,155 +220,157 @@ def _windowed_body(
     over the shard.
     """
     w = min(window, k)
+    step = _windowed_step_fn(w, eps, axis_name, tile_m, interpret)
 
-    def body_fn_tiled(Vl, maskl):
+    def body_fn(Vl, maskl):
+        Mloc = Vl.shape[1]
+        dtype = Vl.dtype
+        ax = jax.lax.axis_index(axis_name)
+        off = ax.astype(jnp.int32) * Mloc
+
+        diag = jnp.sum(Vl * Vl, axis=0)
+        d2 = jnp.where(maskl, diag, NEG_INF)
+        C = jnp.zeros((w, Mloc), dtype)
+        win = jnp.full((w,), -1, jnp.int32)  # window order: 0 = oldest
+        sel = jnp.full((k,), -1, jnp.int32)
+        d_hist = jnp.zeros((k,), dtype)
+
+        def body(t, state):
+            C, d2, win, sel, d_hist, stopped = state
+            C, d2, win, stopped, j, dj = step(
+                t, Vl, ax, off, C, d2, win, stopped
+            )
+            sel = sel.at[t].set(jnp.where(stopped, -1, j))
+            d_hist = d_hist.at[t].set(jnp.where(stopped, 0.0, dj))
+            return C, d2, win, sel, d_hist, stopped
+
+        state = (C, d2, win, sel, d_hist, jnp.asarray(False))
+        _, _, _, sel, d_hist, _ = jax.lax.fori_loop(0, k, body, state)
+        return sel, jnp.sum(sel >= 0).astype(jnp.int32), d_hist
+
+    return body_fn
+
+
+def _windowed_step_fn(
+    w: int, eps: float, axis_name: str,
+    tile_m: Optional[int] = None, interpret: bool = True,
+):
+    """Per-step body of the sharded sliding-window greedy, factored out
+    so the whole-slate loop and the chunked streaming executor run the
+    identical op sequence.  Returns
+    ``step(t, Vl, ax, off, C, d2, win, stopped) ->
+    (C, d2, win, stopped, j, dj)`` on the ring layout ``C (w, Mloc)``.
+    """
+
+    def step_tiled(t, Vl, ax, off, C, d2, win, stopped):
         from repro.kernels.dpp_greedy.tiled import (
             eviction_coeffs,
             tiled_update_windowed,
         )
 
         D, Mloc = Vl.shape
-        dtype = Vl.dtype
-        eps2 = jnp.asarray(eps, dtype) ** 2
-        ax = jax.lax.axis_index(axis_name)
-        off = ax.astype(jnp.int32) * Mloc
+        eps2 = jnp.asarray(eps, Vl.dtype) ** 2
+        win0 = win
+        jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
+        stopped = stopped | (dj2 <= eps2)
+        dj = jnp.sqrt(jnp.maximum(dj2, eps2))
 
-        diag = jnp.sum(Vl * Vl, axis=0)
-        d2 = jnp.where(maskl, diag, NEG_INF)
-        C = jnp.zeros((w, Mloc), dtype)
-        win = jnp.full((w,), -1, jnp.int32)  # window order: 0 = oldest
-        sel = jnp.full((k,), -1, jnp.int32)
-        d_hist = jnp.zeros((k,), dtype)
+        # replicate the (w, w) window factor and the winner's
+        # PRE-eviction column; everything data-dependent but small
+        # is resolved here, between sweeps
+        li = win - off
+        owned = (win >= 0) & (li >= 0) & (li < Mloc)
+        cols = jnp.take(C, jnp.clip(li, 0, Mloc - 1), axis=1)
+        Cw = jax.lax.psum(
+            jnp.where(owned[None, :], cols, jnp.zeros_like(cols)),
+            axis_name,
+        )
+        z = _bcast_from_owner((Vl[:, jl], C[:, jl]), owner, axis_name)
+        vj, cj_pre = z[:D], z[D:]
+        full = jnp.logical_and(t >= w, jnp.logical_not(stopped))
+        cos, sin, cj_post, d2j = eviction_coeffs(Cw, cj_pre, dj2, full, w)
+        djp = jnp.sqrt(jnp.maximum(d2j, eps2))
+        pos = jnp.minimum(t, w - 1)
+        C, d2 = tiled_update_windowed(
+            Vl, C, d2, vj, cj_post, djp, stopped, full, cos, sin,
+            j, off, pos, w=w, tile_m=tile_m, interpret=interpret,
+        )
+        win_shift = jnp.roll(win, -1)
+        win1 = jnp.where(full, win_shift.at[w - 1].set(-1), win)
+        win = jnp.where(stopped, win0, win1.at[pos].set(j))
+        return C, d2, win, stopped, j, dj
 
-        def body(t, state):
-            C, d2, win, sel, d_hist, stopped = state
-            win0 = win
-            jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
-            stopped = stopped | (dj2 <= eps2)
-            dj = jnp.sqrt(jnp.maximum(dj2, eps2))
-
-            # replicate the (w, w) window factor and the winner's
-            # PRE-eviction column; everything data-dependent but small
-            # is resolved here, between sweeps
-            li = win - off
-            owned = (win >= 0) & (li >= 0) & (li < Mloc)
-            cols = jnp.take(C, jnp.clip(li, 0, Mloc - 1), axis=1)
-            Cw = jax.lax.psum(
-                jnp.where(owned[None, :], cols, jnp.zeros_like(cols)),
-                axis_name,
-            )
-            z = _bcast_from_owner((Vl[:, jl], C[:, jl]), owner, axis_name)
-            vj, cj_pre = z[:D], z[D:]
-            full = jnp.logical_and(t >= w, jnp.logical_not(stopped))
-            cos, sin, cj_post, d2j = eviction_coeffs(
-                Cw, cj_pre, dj2, full, w
-            )
-            djp = jnp.sqrt(jnp.maximum(d2j, eps2))
-            pos = jnp.minimum(t, w - 1)
-            C, d2 = tiled_update_windowed(
-                Vl, C, d2, vj, cj_post, djp, stopped, full, cos, sin,
-                j, off, pos, w=w, tile_m=tile_m, interpret=interpret,
-            )
-            win_shift = jnp.roll(win, -1)
-            win1 = jnp.where(full, win_shift.at[w - 1].set(-1), win)
-            win = jnp.where(stopped, win0, win1.at[pos].set(j))
-            sel = sel.at[t].set(jnp.where(stopped, -1, j))
-            d_hist = d_hist.at[t].set(jnp.where(stopped, 0.0, dj))
-            return C, d2, win, sel, d_hist, stopped
-
-        state = (C, d2, win, sel, d_hist, jnp.asarray(False))
-        _, _, _, sel, d_hist, _ = jax.lax.fori_loop(0, k, body, state)
-        return sel, jnp.sum(sel >= 0).astype(jnp.int32), d_hist
-
-    def body_fn(Vl, maskl):
+    def step(t, Vl, ax, off, C, d2, win, stopped):
         D, Mloc = Vl.shape
         dtype = Vl.dtype
         eps2 = jnp.asarray(eps, dtype) ** 2
         tiny = jnp.asarray(1e-30, dtype)
-        ax = jax.lax.axis_index(axis_name)
-        off = ax.astype(jnp.int32) * Mloc
+        C0, d20, win0 = C, d2, win
 
-        diag = jnp.sum(Vl * Vl, axis=0)
-        d2 = jnp.where(maskl, diag, NEG_INF)
-        C = jnp.zeros((w, Mloc), dtype)
-        win = jnp.full((w,), -1, jnp.int32)  # window order: 0 = oldest
-        sel = jnp.full((k,), -1, jnp.int32)
-        d_hist = jnp.zeros((k,), dtype)
+        jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
+        stopped = stopped | (dj2 <= eps2)
+        dj = jnp.sqrt(jnp.maximum(dj2, eps2))
 
-        def body(t, state):
-            C, d2, win, sel, d_hist, stopped = state
-            C0, d20, win0 = C, d2, win
+        # ---- gather the (w, w) window factor C[:, win] from the
+        # owner shard of each window member (one psum)
+        li = win - off
+        owned = (win >= 0) & (li >= 0) & (li < Mloc)
+        cols = jnp.take(C, jnp.clip(li, 0, Mloc - 1), axis=1)  # (w, w)
+        Cw = jax.lax.psum(
+            jnp.where(owned[None, :], cols, jnp.zeros_like(cols)), axis_name
+        )
 
-            jl, dj2, j, owner = _global_argmax(d2, ax, off, axis_name)
-            stopped = stopped | (dj2 <= eps2)
-            dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+        # ---- evict the oldest window item (window full only): the
+        # same first-row Cholesky downdate as the single-device path,
+        # with rotation coefficients read from the replicated Cw
+        full = jnp.logical_and(t >= w, jnp.logical_not(stopped))
+        u = jnp.where(full, C[0], jnp.zeros((Mloc,), dtype))
+        u_w = jnp.where(full, Cw[0], jnp.zeros((w,), dtype))
+        win_shift = jnp.roll(win, -1)
 
-            # ---- gather the (w, w) window factor C[:, win] from the
-            # owner shard of each window member (one psum)
-            li = win - off
-            owned = (win >= 0) & (li >= 0) & (li < Mloc)
-            cols = jnp.take(C, jnp.clip(li, 0, Mloc - 1), axis=1)  # (w, w)
-            Cw = jax.lax.psum(
-                jnp.where(owned[None, :], cols, jnp.zeros_like(cols)), axis_name
-            )
+        def rot(r, carry):
+            C, u, Cw, u_w = carry
+            read = jnp.where(full, r + 1, r)
+            row = jax.lax.dynamic_slice(C, (read, 0), (1, Mloc))[0]
+            row_w = jax.lax.dynamic_slice(Cw, (read, 0), (1, w))[0]
+            a = row_w[r + 1]  # = C[read, win_shift[r]] when full
+            b = u_w[r + 1]
+            rho = jnp.maximum(jnp.sqrt(a * a + b * b), tiny)
+            cos = jnp.where(full, a / rho, 1.0)
+            sin = jnp.where(full, b / rho, 0.0)
+            new_row = cos * row + sin * u
+            new_row_w = cos * row_w + sin * u_w
+            u = cos * u - sin * row
+            u_w = cos * u_w - sin * row_w
+            C = jax.lax.dynamic_update_slice(C, new_row[None], (r, 0))
+            Cw = jax.lax.dynamic_update_slice(Cw, new_row_w[None], (r, 0))
+            return C, u, Cw, u_w
 
-            # ---- evict the oldest window item (window full only): the
-            # same first-row Cholesky downdate as the single-device path,
-            # with rotation coefficients read from the replicated Cw
-            full = jnp.logical_and(t >= w, jnp.logical_not(stopped))
-            u = jnp.where(full, C[0], jnp.zeros((Mloc,), dtype))
-            u_w = jnp.where(full, Cw[0], jnp.zeros((w,), dtype))
-            win_shift = jnp.roll(win, -1)
+        C, u, _, _ = jax.lax.fori_loop(0, w - 1, rot, (C, u, Cw, u_w))
+        C = jnp.where(full, C.at[w - 1].set(0.0), C)
+        d2 = jnp.where(full, d2 + u * u, d2)
+        win = jnp.where(full, win_shift.at[w - 1].set(-1), win)
 
-            def rot(r, carry):
-                C, u, Cw, u_w = carry
-                read = jnp.where(full, r + 1, r)
-                row = jax.lax.dynamic_slice(C, (read, 0), (1, Mloc))[0]
-                row_w = jax.lax.dynamic_slice(Cw, (read, 0), (1, w))[0]
-                a = row_w[r + 1]  # = C[read, win_shift[r]] when full
-                b = u_w[r + 1]
-                rho = jnp.maximum(jnp.sqrt(a * a + b * b), tiny)
-                cos = jnp.where(full, a / rho, 1.0)
-                sin = jnp.where(full, b / rho, 0.0)
-                new_row = cos * row + sin * u
-                new_row_w = cos * row_w + sin * u_w
-                u = cos * u - sin * row
-                u_w = cos * u_w - sin * row_w
-                C = jax.lax.dynamic_update_slice(C, new_row[None], (r, 0))
-                Cw = jax.lax.dynamic_update_slice(Cw, new_row_w[None], (r, 0))
-                return C, u, Cw, u_w
+        # ---- append j against the post-eviction window: broadcast
+        # V[:, j], the post-eviction c_j and the repaired d2[j]
+        z = _bcast_from_owner(
+            (Vl[:, jl], C[:, jl], d2[jl]), owner, axis_name
+        )
+        vj, cj, d2j = z[:D], z[D : D + w], z[D + w]
+        djp = jnp.sqrt(jnp.maximum(d2j, eps2))
+        e = (vj @ Vl - cj @ C) / djp
+        pos = jnp.minimum(t, w - 1)
+        C_next = jax.lax.dynamic_update_slice(C, e[None], (pos, 0))
+        d2_next = d2 - e * e
+        d2_next = d2_next.at[jl].set(jnp.where(owner, NEG_INF, d2_next[jl]))
+        win_next = win.at[pos].set(j)
 
-            C, u, _, _ = jax.lax.fori_loop(0, w - 1, rot, (C, u, Cw, u_w))
-            C = jnp.where(full, C.at[w - 1].set(0.0), C)
-            d2 = jnp.where(full, d2 + u * u, d2)
-            win = jnp.where(full, win_shift.at[w - 1].set(-1), win)
+        C = jnp.where(stopped, C0, C_next)
+        d2 = jnp.where(stopped, d20, d2_next)
+        win = jnp.where(stopped, win0, win_next)
+        return C, d2, win, stopped, j, dj
 
-            # ---- append j against the post-eviction window: broadcast
-            # V[:, j], the post-eviction c_j and the repaired d2[j]
-            z = _bcast_from_owner(
-                (Vl[:, jl], C[:, jl], d2[jl]), owner, axis_name
-            )
-            vj, cj, d2j = z[:D], z[D : D + w], z[D + w]
-            djp = jnp.sqrt(jnp.maximum(d2j, eps2))
-            e = (vj @ Vl - cj @ C) / djp
-            pos = jnp.minimum(t, w - 1)
-            C_next = jax.lax.dynamic_update_slice(C, e[None], (pos, 0))
-            d2_next = d2 - e * e
-            d2_next = d2_next.at[jl].set(jnp.where(owner, NEG_INF, d2_next[jl]))
-            win_next = win.at[pos].set(j)
-
-            C = jnp.where(stopped, C0, C_next)
-            d2 = jnp.where(stopped, d20, d2_next)
-            win = jnp.where(stopped, win0, win_next)
-            sel = sel.at[t].set(jnp.where(stopped, -1, j))
-            d_hist = d_hist.at[t].set(jnp.where(stopped, 0.0, dj))
-            return C, d2, win, sel, d_hist, stopped
-
-        state = (C, d2, win, sel, d_hist, jnp.asarray(False))
-        _, _, _, sel, d_hist, _ = jax.lax.fori_loop(0, k, body, state)
-        return sel, jnp.sum(sel >= 0).astype(jnp.int32), d_hist
-
-    return body_fn_tiled if tile_m is not None else body_fn
+    return step_tiled if tile_m is not None else step
 
 
 # Compiled shard_map callables, keyed by (mesh, axis_name, static args).
@@ -396,6 +402,238 @@ def _greedy_fn(
             out_specs=(P(), P(), P()),
         )
     )
+
+
+# ---------------------------------------------------------------------------
+# Resumable streaming execution (chunk-emitting; repro.core.streaming)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def _stream_init_fn(mesh, axis_name: str, batched: bool = False):
+    """d2 initialization as a shard_map so the per-shard reduction order
+    matches the whole-slate body bit for bit."""
+
+    def body(Vl, maskl):
+        diag = jnp.sum(Vl * Vl, axis=0)
+        return jnp.where(maskl, diag, NEG_INF)
+
+    if batched:
+        body = jax.vmap(body)
+        in_specs = (P(None, None, axis_name), P(None, axis_name))
+        out_specs = P(None, axis_name)
+    else:
+        in_specs = (P(None, axis_name), P(axis_name))
+        out_specs = P(axis_name)
+    return jax.jit(
+        shard_map_compat(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+        )
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def _stream_chunk_fn(
+    mesh, axis_name: str, chunk: int, w: Optional[int], eps: float,
+    batched: bool = False, tile_m: Optional[int] = None,
+    interpret: bool = True,
+):
+    """Compiled shard_map advancing ``chunk`` greedy steps on resumable
+    sharded state.  The per-device loop body is built from the same step
+    factories as the whole-slate ``_greedy_fn``, so a sequence of chunks
+    reproduces the whole-slate selection exactly; between chunks the
+    C/d2 shards stay device-resident and only the (chunk,)-sized
+    sel/d_hist (plus the replicated ring/stop scalars) reach the host —
+    one collective round per chunk, not per slate."""
+    windowed = w is not None
+
+    if windowed:
+        step = _windowed_step_fn(w, eps, axis_name, tile_m, interpret)
+
+        def body(Vl, C, d2, win, stopped, t0):
+            Mloc = Vl.shape[1]
+            ax = jax.lax.axis_index(axis_name)
+            off = ax.astype(jnp.int32) * Mloc
+            sel = jnp.full((chunk,), -1, jnp.int32)
+            dh = jnp.zeros((chunk,), d2.dtype)
+
+            def sbody(s, carry):
+                C, d2, win, stopped, sel, dh = carry
+                C, d2, win, stopped, j, dj = step(
+                    t0 + s, Vl, ax, off, C, d2, win, stopped
+                )
+                sel = sel.at[s].set(jnp.where(stopped, -1, j))
+                dh = dh.at[s].set(jnp.where(stopped, 0.0, dj))
+                return C, d2, win, stopped, sel, dh
+
+            return jax.lax.fori_loop(
+                0, chunk, sbody, (C, d2, win, stopped, sel, dh)
+            )
+
+        c_spec = P(None, axis_name)
+        state_in = (c_spec, P(axis_name), P(), P())
+        state_out = (c_spec, P(axis_name), P(), P())
+    else:
+        step = _exact_step_fn(eps, axis_name, tile_m, interpret)
+
+        def body(Vl, C, d2, stopped, t0):
+            Mloc = Vl.shape[1]
+            ax = jax.lax.axis_index(axis_name)
+            off = ax.astype(jnp.int32) * Mloc
+            sel = jnp.full((chunk,), -1, jnp.int32)
+            dh = jnp.zeros((chunk,), d2.dtype)
+
+            def sbody(s, carry):
+                C, d2, stopped, sel, dh = carry
+                C, d2, stopped, j, dj = step(
+                    t0 + s, Vl, ax, off, C, d2, stopped
+                )
+                sel = sel.at[s].set(jnp.where(stopped, -1, j))
+                dh = dh.at[s].set(jnp.where(stopped, 0.0, dj))
+                return C, d2, stopped, sel, dh
+
+            return jax.lax.fori_loop(
+                0, chunk, sbody, (C, d2, stopped, sel, dh)
+            )
+
+        # row layout (k, Mloc) for the tiled pass, column layout
+        # (Mloc, k) for jnp — as in the whole-slate bodies
+        c_spec = P(None, axis_name) if tile_m is not None else P(axis_name, None)
+        state_in = (c_spec, P(axis_name), P())
+        state_out = (c_spec, P(axis_name), P())
+
+    if batched:
+        nstate = len(state_in)
+        body = jax.vmap(body, in_axes=(0,) * (1 + nstate) + (None,))
+        bat = lambda spec: P(None, *spec)
+        in_specs = (
+            (P(None, None, axis_name),)
+            + tuple(bat(s) for s in state_in)
+            + (P(),)
+        )
+        out_specs = tuple(bat(s) for s in state_out) + (
+            P(None, None), P(None, None),
+        )
+    else:
+        in_specs = (P(None, axis_name),) + state_in + (P(),)
+        out_specs = state_out + (P(), P())
+    return jax.jit(
+        shard_map_compat(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+        )
+    )
+
+
+def _stream_pad(V, Mp):
+    M = V.shape[-1]
+    if Mp == M:
+        return V
+    pad = [(0, 0)] * (V.ndim - 1) + [(0, Mp - M)]
+    return jnp.pad(V, pad)
+
+
+def dpp_greedy_sharded_stream_init(
+    V: jnp.ndarray,
+    k: int,
+    *,
+    mesh,
+    axis_name: str = "data",
+    window: Optional[int] = None,
+    mask: Optional[jnp.ndarray] = None,
+    tile_m: Optional[int] = None,
+):
+    """Initial resumable state for the sharded streaming path.
+
+    Same contract as ``dpp_greedy_sharded`` (V (D, M) / (B, D, M),
+    mask broadcastable, M padded to the mesh/tile quantum); returns a
+    ``repro.core.streaming.GreedyState`` whose C/d2 leaves are the
+    *global* views of the per-device slices (layouts as the whole-slate
+    bodies use: exact jnp ``(M, k)`` columns, exact tiled ``(k, M)``
+    rows, windowed ``(w, M)`` ring).
+    """
+    from repro.core.streaming import GreedyState
+    from repro.kernels.dpp_greedy.tiling import validate_tile_m
+
+    if V.ndim not in (2, 3):
+        raise ValueError(
+            f"sharded streaming takes V (D, M) or a user batch (B, D, M), "
+            f"got ndim={V.ndim}"
+        )
+    if k <= 0:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if window is not None and window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    validate_tile_m(tile_m)
+    batched = V.ndim == 3
+    B = V.shape[0] if batched else None
+    nshards = _mesh_axis_size(mesh, axis_name)
+    M = V.shape[-1]
+    mask_shape = (B, M) if batched else (M,)
+    if mask is None:
+        mask = jnp.ones(mask_shape, bool)
+    elif mask.shape != mask_shape:
+        mask = jnp.broadcast_to(mask, mask_shape)
+    quantum = nshards * (tile_m or 1)
+    Mp = -(-M // quantum) * quantum
+    V = _stream_pad(V, Mp)
+    if Mp != M:
+        mask = jnp.pad(
+            mask, [(0, 0)] * (mask.ndim - 1) + [(0, Mp - M)],
+            constant_values=False,
+        )
+    d2 = _stream_init_fn(mesh, axis_name, batched)(V, mask)
+    dtype = V.dtype
+    windowed = window is not None and window < k
+    lead = (B,) if batched else ()
+    if windowed:
+        w = min(window, k)
+        C = jnp.zeros(lead + (w, Mp), dtype)
+        win = jnp.full(lead + (w,), -1, jnp.int32)
+    else:
+        shape = (k, Mp) if tile_m is not None else (Mp, k)
+        C = jnp.zeros(lead + shape, dtype)
+        win = jnp.zeros(lead + (0,), jnp.int32)
+    stopped = jnp.zeros(lead, bool) if batched else jnp.asarray(False)
+    return GreedyState(jnp.zeros((), jnp.int32), stopped, C, d2, win)
+
+
+def dpp_greedy_sharded_stream_chunk(
+    V: jnp.ndarray,
+    state,
+    chunk: int,
+    *,
+    mesh,
+    axis_name: str = "data",
+    eps: float = 1e-6,
+    tile_m: Optional[int] = None,
+    interpret: bool = True,
+):
+    """Advance ``chunk`` sharded greedy steps on a resumable state.
+
+    The state is authoritative for the mode (its ``win`` leaf decides
+    windowed vs exact).  Returns ``(state, sel, dh)`` — ``sel``/``dh``
+    shaped ``(chunk,)`` single / ``(B, chunk)`` batched, global
+    candidate ids.  Chunks concatenate exactly to
+    ``dpp_greedy_sharded``'s whole-slate result.
+    """
+    batched = V.ndim == 3
+    V = _stream_pad(V, state.d2.shape[-1])
+    windowed = state.win.shape[-1] > 0
+    w = state.win.shape[-1] if windowed else None
+    fn = _stream_chunk_fn(
+        mesh, axis_name, chunk, w, float(eps), batched, tile_m, interpret
+    )
+    if windowed:
+        C, d2, win, stopped, sel, dh = fn(
+            V, state.C, state.d2, state.win, state.stopped, state.t
+        )
+    else:
+        C, d2, stopped, sel, dh = fn(
+            V, state.C, state.d2, state.stopped, state.t
+        )
+        win = state.win
+    new_state = type(state)(state.t + chunk, stopped, C, d2, win)
+    return new_state, sel, dh
 
 
 def dpp_greedy_sharded(

@@ -1,0 +1,247 @@
+"""Step-resumable greedy MAP — the state/init/step/chunk layer under
+streaming slate emission.
+
+The paper's greedy loop is a pure recurrence on a small state (the
+incremental Cholesky rows, the marginal gains ``d2`` and, windowed, the
+ring order); the whole-slate entry points in ``greedy_chol`` /
+``windowed`` just run it ``k`` times inside one ``fori_loop``.  This
+module reifies that state as :class:`GreedyState` and exposes the
+recurrence in resumable pieces:
+
+* ``greedy_init(spec, L=|V=, mask=)``  -> initial state;
+* ``greedy_step(spec, state, ...)``    -> one selection;
+* ``greedy_chunk(spec, state, ...)``   -> ``chunk_size`` selections.
+
+Chunks concatenate *exactly* (indices bitwise, d_hist to the last bit on
+the jnp backend, ~1 ulp across kernels) to the whole-slate result,
+because every backend's chunk executor runs the identical per-step op
+sequence as its whole-slate loop:
+
+* jnp       — ``greedy_step_exact`` / ``greedy_step_windowed``, the very
+              functions the whole-slate ``fori_loop`` bodies call;
+* pallas    — the fused multi-step chunk kernels
+              (``repro.kernels.dpp_greedy.ops.dpp_greedy_stream_*``):
+              one grid sweep per step, one ``pallas_call`` — one HBM
+              C/d2 round-trip — per *chunk*;
+* sharded   — per-device chunk bodies built from the same step factories
+              as the whole-slate SPMD loop
+              (``repro.core.sharded.dpp_greedy_sharded_stream_*``); the
+              sharded state stays device-resident between chunks.
+
+``GreedyState`` is **backend-specific and opaque**: the jnp exact state
+keeps the paper's column layout ``C (M, k)``, the windowed state the
+ring layout ``C (w, M)``, the Pallas state the kernels' padded row
+layout, and the sharded state globally-shaped sharded arrays.  Always
+thread a state back into the same ``spec`` (and kernel operand) that
+created it.
+
+The serving front door is ``repro.serving.reranker.rerank_stream``; the
+dispatch-level generator is ``repro.core.dispatch.greedy_map_chunks``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.greedy_chol import NEG_INF, greedy_step_exact
+from repro.core.windowed import greedy_step_windowed
+
+
+class GreedyState(NamedTuple):
+    """Resumable greedy MAP state (backend-specific layouts, see module
+    docstring).
+
+    t:       () int32 — the next absolute step index.
+    stopped: () bool  — eps-stop latch ((B,) for batched Pallas states).
+    C:       Cholesky state — jnp exact ``(M, k)`` columns, windowed
+             ``(w, M)`` ring rows; Pallas ``(B, R, Mp)``; sharded the
+             global view of the per-device slices.
+    d2:      marginal gains with the selectability mask folded in
+             (masked candidates sit at -inf) — ``(M,)`` / ``(B, Mp)``.
+    win:     window ring ids, oldest first (``(0,)``-shaped when exact).
+    """
+
+    t: jnp.ndarray
+    stopped: jnp.ndarray
+    C: jnp.ndarray
+    d2: jnp.ndarray
+    win: jnp.ndarray
+
+
+def _check_kernel_args(spec, L, V):
+    if (L is None) == (V is None):
+        raise ValueError("pass exactly one of L= (dense) or V= (low-rank)")
+    if L is not None and (spec.backend == "pallas" or spec.sharded()):
+        raise ValueError(
+            f"backend {spec.backend!r} streams the low-rank V only — a "
+            f"dense L cannot be tiled or candidate-sharded"
+        )
+
+
+def resolve_chunk(spec, chunk_size: Optional[int]) -> int:
+    """The effective chunk size: the explicit argument wins, else
+    ``spec.chunk_size``; one of them must be set and positive."""
+    c = chunk_size if chunk_size is not None else spec.chunk_size
+    if c is None:
+        raise ValueError(
+            "no chunk size: pass chunk_size= or set GreedySpec.chunk_size"
+        )
+    if c < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {c}")
+    return c
+
+
+# ---------------------------------------------------------------------------
+# jnp executors (single problem; dense L or low-rank V)
+# ---------------------------------------------------------------------------
+
+
+def _init_jnp(k: int, window: Optional[int], L, V, mask) -> GreedyState:
+    kern = L if L is not None else V
+    if kern.ndim != 2:
+        raise ValueError(
+            f"jnp streaming takes a single problem (L (M, M) / V (D, M)), "
+            f"got ndim={kern.ndim}"
+        )
+    M = kern.shape[-1]
+    dtype = kern.dtype
+    if mask is None:
+        mask = jnp.ones((M,), bool)
+    diag = jnp.diagonal(L) if L is not None else jnp.sum(V * V, axis=0)
+    d2 = jnp.where(mask, diag, NEG_INF)
+    if window is not None and window < k:
+        w = min(window, k)
+        C = jnp.zeros((w, M), dtype)
+        win = jnp.full((w,), -1, jnp.int32)
+    else:
+        C = jnp.zeros((M, k), dtype)
+        win = jnp.zeros((0,), jnp.int32)
+    return GreedyState(
+        jnp.zeros((), jnp.int32), jnp.asarray(False), C, d2, win
+    )
+
+
+def _chunk_body(row_fn, state: GreedyState, chunk: int, eps: float):
+    """``chunk`` steps of the shared per-step bodies, absolute step
+    ``t = state.t + s`` — the same op sequence as the whole-slate loops."""
+    dtype = state.d2.dtype
+    eps2 = jnp.asarray(eps, dtype) ** 2
+    tiny = jnp.asarray(1e-30, dtype)
+    windowed = state.win.shape[0] > 0
+    sel = jnp.full((chunk,), -1, jnp.int32)
+    dh = jnp.zeros((chunk,), dtype)
+
+    if windowed:
+        w = state.C.shape[0]
+
+        def body(s, carry):
+            C, d2, win, stopped, sel, dh = carry
+            C, d2, win, stopped, j, dj = greedy_step_windowed(
+                row_fn, state.t + s, C, d2, win, stopped,
+                w=w, eps2=eps2, tiny=tiny,
+            )
+            sel = sel.at[s].set(jnp.where(stopped, -1, j))
+            dh = dh.at[s].set(jnp.where(stopped, 0.0, dj))
+            return C, d2, win, stopped, sel, dh
+
+        C, d2, win, stopped, sel, dh = jax.lax.fori_loop(
+            0, chunk, body,
+            (state.C, state.d2, state.win, state.stopped, sel, dh),
+        )
+    else:
+
+        def body(s, carry):
+            C, d2, stopped, sel, dh = carry
+            C, d2, stopped, j, dj = greedy_step_exact(
+                row_fn, state.t + s, C, d2, stopped, eps2
+            )
+            sel = sel.at[s].set(jnp.where(stopped, -1, j))
+            dh = dh.at[s].set(jnp.where(stopped, 0.0, dj))
+            return C, d2, stopped, sel, dh
+
+        C, d2, stopped, sel, dh = jax.lax.fori_loop(
+            0, chunk, body, (state.C, state.d2, state.stopped, sel, dh)
+        )
+        win = state.win
+    next_state = GreedyState(state.t + chunk, stopped, C, d2, win)
+    return next_state, sel, dh
+
+
+@partial(jax.jit, static_argnames=("chunk", "eps"))
+def _chunk_dense(L, state, chunk: int, eps: float):
+    return _chunk_body(lambda j: L[j], state, chunk, eps)
+
+
+@partial(jax.jit, static_argnames=("chunk", "eps"))
+def _chunk_lowrank(V, state, chunk: int, eps: float):
+    return _chunk_body(lambda j: V[:, j] @ V, state, chunk, eps)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-aware front doors
+# ---------------------------------------------------------------------------
+
+
+def greedy_init(spec, *, L=None, V=None, mask=None) -> GreedyState:
+    """Initial resumable state for ``spec`` on a dense (L) or low-rank
+    (V) kernel.  ``mask`` marks selectable candidates; it is folded into
+    the state (masked entries can never be selected in any later chunk).
+    """
+    _check_kernel_args(spec, L, V)
+    if spec.sharded():
+        from repro.core.sharded import dpp_greedy_sharded_stream_init
+
+        return dpp_greedy_sharded_stream_init(
+            V, spec.k, mesh=spec.mesh, axis_name=spec.axis_name,
+            window=spec.window, mask=mask, tile_m=spec.tile_m,
+        )
+    if spec.backend == "pallas":
+        from repro.kernels.dpp_greedy import dpp_greedy_stream_init
+
+        return dpp_greedy_stream_init(
+            V, spec.k, mask=mask, window=spec.window, tile_m=spec.tile_m
+        )
+    return _init_jnp(spec.k, spec.window, L, V, mask)
+
+
+def greedy_chunk(
+    spec, state: GreedyState, *, L=None, V=None,
+    chunk_size: Optional[int] = None,
+):
+    """Advance ``chunk_size`` greedy steps (default ``spec.chunk_size``).
+
+    Returns ``(next_state, sel (chunk,), d_hist (chunk,))`` — with a
+    leading batch axis on ``sel``/``d_hist`` for batched Pallas/sharded
+    states.  Slots after an eps-stop hold -1 / 0, exactly as the
+    whole-slate result's tail does.  The caller sizes chunks so the
+    total never exceeds ``spec.k`` on the exact path (the windowed ring
+    is unbounded); ``repro.core.dispatch.greedy_map_chunks`` does this.
+    """
+    _check_kernel_args(spec, L, V)
+    chunk = resolve_chunk(spec, chunk_size)
+    if spec.sharded():
+        from repro.core.sharded import dpp_greedy_sharded_stream_chunk
+
+        return dpp_greedy_sharded_stream_chunk(
+            V, state, chunk, mesh=spec.mesh, axis_name=spec.axis_name,
+            eps=spec.eps, tile_m=spec.tile_m, interpret=spec.interpret,
+        )
+    if spec.backend == "pallas":
+        from repro.kernels.dpp_greedy import dpp_greedy_stream_chunk
+
+        return dpp_greedy_stream_chunk(
+            V, state, chunk, eps=spec.eps, tile_m=spec.tile_m,
+            interpret=spec.interpret,
+        )
+    fn = _chunk_dense if L is not None else _chunk_lowrank
+    return fn(L if L is not None else V, state, chunk, float(spec.eps))
+
+
+def greedy_step(spec, state: GreedyState, *, L=None, V=None):
+    """One greedy step: ``(next_state, idx, d)`` with scalar ``idx``/``d``
+    (-1 / 0 once eps-stopped).  Sugar for a chunk of one."""
+    state, sel, dh = greedy_chunk(spec, state, L=L, V=V, chunk_size=1)
+    return state, sel[..., 0], dh[..., 0]

@@ -47,6 +47,71 @@ import jax.numpy as jnp
 from repro.core.greedy_chol import NEG_INF, GreedyResult
 
 
+def greedy_step_windowed(row_fn, t, C, d2, win, stopped, *, w, eps2, tiny):
+    """One sliding-window greedy step on the ring state ``C (w, M)``.
+
+    Factored out of the ``_windowed_loop`` fori body so the whole-slate
+    loop and the chunked/resumable executors in ``repro.core.streaming``
+    run the *identical* op sequence — streamed chunks concatenate
+    bitwise to the whole-slate result.  ``t`` is the absolute step
+    index (it decides eviction, ``t >= w``, and the ring row ``pos``).
+
+    Returns ``(C, d2, win, stopped, j, dj)``.
+    """
+    M = d2.shape[0]
+    dtype = d2.dtype
+    C0, d20, win0 = C, d2, win
+
+    # ---- select against the current window of min(t, w) picks
+    # (paper eq. 13; d2 is maintained incrementally across steps)
+    j = jnp.argmax(d2)
+    dj2 = d2[j]
+    stopped = stopped | (dj2 <= eps2)
+    dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+
+    # ---- evict the oldest window item to make room (window full only)
+    full = jnp.logical_and(t >= w, jnp.logical_not(stopped))
+    u = jnp.where(full, C[0], jnp.zeros((M,), dtype))
+    win_shift = jnp.roll(win, -1)  # win_shift[r] = old win[r+1]
+
+    def rot(r, Cu):
+        C, u = Cu
+        # when not evicting, read row r and rotate by identity (no-op)
+        read = jnp.where(full, r + 1, r)
+        row = jax.lax.dynamic_slice(C, (read, 0), (1, M))[0]
+        idx = jnp.clip(win_shift[r], 0)
+        a = row[idx]  # current window-factor diagonal V22[r, r]
+        b = u[idx]  # current downdate vector entry v[r]
+        rho = jnp.maximum(jnp.sqrt(a * a + b * b), tiny)
+        cos = jnp.where(full, a / rho, 1.0)
+        sin = jnp.where(full, b / rho, 0.0)
+        new_row = cos * row + sin * u
+        u = cos * u - sin * row
+        C = jax.lax.dynamic_update_slice(C, new_row[None], (r, 0))
+        return C, u
+
+    C, u = jax.lax.fori_loop(0, w - 1, rot, (C, u))
+    # the evicted slot: stale last row is cleared, d2 regains the
+    # norm carried away by the rotation residue row
+    C = jnp.where(full, C.at[w - 1].set(0.0), C)
+    d2 = jnp.where(full, d2 + u * u, d2)
+    win = jnp.where(full, win_shift.at[w - 1].set(-1), win)
+
+    # ---- append j against the *post-eviction* window (eqs. 16-18);
+    # its marginal there is d2[j] repaired by the eviction (>= dj2)
+    djp = jnp.sqrt(jnp.maximum(d2[j], eps2))
+    e = (row_fn(j) - C[:, j] @ C) / djp
+    pos = jnp.minimum(t, w - 1)
+    C_next = jax.lax.dynamic_update_slice(C, e[None], (pos, 0))
+    d2_next = (d2 - e * e).at[j].set(NEG_INF)
+    win_next = win.at[pos].set(j)
+
+    C = jnp.where(stopped, C0, C_next)
+    d2 = jnp.where(stopped, d20, d2_next)
+    win = jnp.where(stopped, win0, win_next)
+    return C, d2, win, stopped, j, dj
+
+
 def _windowed_loop(
     diag: jnp.ndarray,
     row_fn: Callable[[jnp.ndarray], jnp.ndarray],
@@ -76,55 +141,9 @@ def _windowed_loop(
 
     def body(t, state):
         C, d2, win, sel, d_hist, stopped = state
-        C0, d20, win0 = C, d2, win
-
-        # ---- select against the current window of min(t, w) picks
-        # (paper eq. 13; d2 is maintained incrementally across steps)
-        j = jnp.argmax(d2)
-        dj2 = d2[j]
-        stopped = stopped | (dj2 <= eps2)
-        dj = jnp.sqrt(jnp.maximum(dj2, eps2))
-
-        # ---- evict the oldest window item to make room (window full only)
-        full = jnp.logical_and(t >= w, jnp.logical_not(stopped))
-        u = jnp.where(full, C[0], jnp.zeros((M,), dtype))
-        win_shift = jnp.roll(win, -1)  # win_shift[r] = old win[r+1]
-
-        def rot(r, Cu):
-            C, u = Cu
-            # when not evicting, read row r and rotate by identity (no-op)
-            read = jnp.where(full, r + 1, r)
-            row = jax.lax.dynamic_slice(C, (read, 0), (1, M))[0]
-            idx = jnp.clip(win_shift[r], 0)
-            a = row[idx]  # current window-factor diagonal V22[r, r]
-            b = u[idx]  # current downdate vector entry v[r]
-            rho = jnp.maximum(jnp.sqrt(a * a + b * b), tiny)
-            cos = jnp.where(full, a / rho, 1.0)
-            sin = jnp.where(full, b / rho, 0.0)
-            new_row = cos * row + sin * u
-            u = cos * u - sin * row
-            C = jax.lax.dynamic_update_slice(C, new_row[None], (r, 0))
-            return C, u
-
-        C, u = jax.lax.fori_loop(0, w - 1, rot, (C, u))
-        # the evicted slot: stale last row is cleared, d2 regains the
-        # norm carried away by the rotation residue row
-        C = jnp.where(full, C.at[w - 1].set(0.0), C)
-        d2 = jnp.where(full, d2 + u * u, d2)
-        win = jnp.where(full, win_shift.at[w - 1].set(-1), win)
-
-        # ---- append j against the *post-eviction* window (eqs. 16-18);
-        # its marginal there is d2[j] repaired by the eviction (>= dj2)
-        djp = jnp.sqrt(jnp.maximum(d2[j], eps2))
-        e = (row_fn(j) - C[:, j] @ C) / djp
-        pos = jnp.minimum(t, w - 1)
-        C_next = jax.lax.dynamic_update_slice(C, e[None], (pos, 0))
-        d2_next = (d2 - e * e).at[j].set(NEG_INF)
-        win_next = win.at[pos].set(j)
-
-        C = jnp.where(stopped, C0, C_next)
-        d2 = jnp.where(stopped, d20, d2_next)
-        win = jnp.where(stopped, win0, win_next)
+        C, d2, win, stopped, j, dj = greedy_step_windowed(
+            row_fn, t, C, d2, win, stopped, w=w, eps2=eps2, tiny=tiny
+        )
         sel = sel.at[t].set(jnp.where(stopped, -1, j))
         d_hist = d_hist.at[t].set(jnp.where(stopped, 0.0, dj))
         return C, d2, win, sel, d_hist, stopped

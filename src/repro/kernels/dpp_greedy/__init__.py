@@ -1,4 +1,10 @@
-from repro.kernels.dpp_greedy.ops import dpp_greedy, vmem_bytes
+from repro.kernels.dpp_greedy.ops import (
+    dpp_greedy,
+    dpp_greedy_stream_chunk,
+    dpp_greedy_stream_init,
+    dpp_greedy_stream_pad,
+    vmem_bytes,
+)
 from repro.kernels.dpp_greedy.ref import dpp_greedy_ref
 from repro.kernels.dpp_greedy.tiled import dpp_greedy_tiled
 from repro.kernels.dpp_greedy.tiling import (
@@ -11,6 +17,9 @@ from repro.kernels.dpp_greedy.tiling import (
 __all__ = [
     "dpp_greedy",
     "dpp_greedy_ref",
+    "dpp_greedy_stream_chunk",
+    "dpp_greedy_stream_init",
+    "dpp_greedy_stream_pad",
     "dpp_greedy_tiled",
     "TilePolicy",
     "VMEM_BUDGET_BYTES",

@@ -27,7 +27,11 @@ import jax.numpy as jnp
 
 from repro.kernels.dpp_greedy.dpp_greedy import dpp_greedy_kernel
 from repro.kernels.dpp_greedy.ref import dpp_greedy_ref
-from repro.kernels.dpp_greedy.tiled import dpp_greedy_tiled
+from repro.kernels.dpp_greedy.tiled import (
+    dpp_greedy_tiled,
+    fused_chunk_exact,
+    fused_chunk_windowed,
+)
 # VMEM_BUDGET_BYTES / tile_vmem_bytes / untiled_vmem_bytes / vmem_bytes
 # are re-exported for back-compat: pre-tiling callers imported the
 # budget and accounting from ops (the module that used to own the gate).
@@ -96,3 +100,146 @@ def dpp_greedy(
         V, mask, k, window=window, eps=eps, tile_m=min(tm, Mp),
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Resumable streaming execution (chunk-emitting; repro.core.streaming)
+# ---------------------------------------------------------------------------
+
+
+def _stream_tile(D: int, M: int, state_rows: int, windowed: bool,
+                 tile_m: Optional[int], tile_policy: Optional[TilePolicy]):
+    """The candidate-axis tile a streaming state uses, derived
+    deterministically from the problem shape so init and every chunk
+    agree.  Resident-size working sets run the fused chunk kernel as a
+    single whole-M tile (the VMEM-resident analogue)."""
+    if tile_m is not None and tile_policy is not None:
+        raise ValueError("pass at most one of tile_m= or tile_policy=")
+    policy = tile_policy or TilePolicy(tile_m=tile_m)
+    mode, tm = policy.decide(D, M, state_rows, windowed)
+    if mode == "jnp":
+        raise ValueError(
+            "pathological shape: even one lane-width tile exceeds the VMEM "
+            "budget — stream through the jnp backend instead"
+        )
+    if mode == "resident":
+        Mp = _round_up(M, LANE)
+        return Mp, Mp
+    Mp = _round_up(M, tm)
+    return min(tm, Mp), Mp
+
+
+def dpp_greedy_stream_init(
+    V: jnp.ndarray,
+    k: int,
+    mask: jnp.ndarray | None = None,
+    window: int | None = None,
+    tile_m: Optional[int] = None,
+    tile_policy: Optional[TilePolicy] = None,
+):
+    """Initial resumable state for the Pallas streaming path.
+
+    V (D, M) single or (B, D, M) batched.  Returns a
+    ``repro.core.streaming.GreedyState`` in the kernels' layout: padded
+    row-layout Cholesky state ``C (B, R, Mp)``, ``d2 (B, Mp)`` with the
+    mask (and padding) folded in, ``win (B, w)`` ring ids (``(B, 0)``
+    exact), per-user ``stopped (B,)``.
+    """
+    from repro.core.streaming import GreedyState
+
+    if window is not None and window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    single = V.ndim == 2
+    Vb = (V[None] if single else V).astype(jnp.float32)
+    B, D, M = Vb.shape
+    windowed = window is not None and window < k
+    R = min(window, k) if windowed else k
+    tile, Mp = _stream_tile(D, M, R, windowed, tile_m, tile_policy)
+    if mask is None:
+        mask = jnp.ones((B, M), bool)
+    elif mask.ndim == 1:
+        mask = mask[None]
+    Dp = _round_up(D, SUBLANE)
+    if (Mp, Dp) != (M, D):
+        Vb = jnp.pad(Vb, ((0, 0), (0, Dp - D), (0, Mp - M)))
+        mask = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, Mp - M)))
+    diag = jnp.sum(Vb * Vb, axis=1)  # (B, Mp)
+    d2 = jnp.where(mask > 0, diag, float("-inf"))
+    C = jnp.zeros((B, R, Mp), jnp.float32)
+    win = (
+        jnp.full((B, R), -1, jnp.int32) if windowed
+        else jnp.zeros((B, 0), jnp.int32)
+    )
+    return GreedyState(
+        jnp.zeros((), jnp.int32), jnp.zeros((B,), bool), C, d2, win
+    )
+
+
+def dpp_greedy_stream_pad(V: jnp.ndarray, state) -> jnp.ndarray:
+    """Pad/cast ``V`` once to the streaming state's (Dp, Mp) geometry.
+
+    ``dpp_greedy_stream_chunk`` accepts raw ``V`` and pads on the fly,
+    but that re-copies the full array every chunk; a generator looping
+    many chunks should pad once up front (the chunk executor detects
+    the already-padded shape and skips the copy) —
+    ``repro.core.dispatch.greedy_map_chunks`` does this."""
+    single = V.ndim == 2
+    Vb = (V[None] if single else V).astype(jnp.float32)
+    B, D, M = Vb.shape
+    Mp = state.d2.shape[-1]
+    Dp = _round_up(D, SUBLANE)
+    if (Mp, Dp) != (M, D):
+        Vb = jnp.pad(Vb, ((0, 0), (0, Dp - D), (0, Mp - M)))
+    return Vb[0] if single else Vb
+
+
+def dpp_greedy_stream_chunk(
+    V: jnp.ndarray,
+    state,
+    chunk: int,
+    *,
+    eps: float = 1e-3,
+    tile_m: Optional[int] = None,
+    tile_policy: Optional[TilePolicy] = None,
+    interpret: bool = True,
+):
+    """Advance ``chunk`` greedy steps on a Pallas streaming state.
+
+    One fused ``pallas_call`` — one HBM C/d2 round-trip — per chunk
+    (see ``repro.kernels.dpp_greedy.tiled``).  The state is
+    authoritative for the mode (its ``win`` leaf decides windowed vs
+    exact).  Returns ``(state, sel, dh)`` with ``sel``/``dh`` shaped
+    ``(chunk,)`` for a single-problem ``V (D, M)`` and ``(B, chunk)``
+    batched.
+    """
+    single = V.ndim == 2
+    Vb = (V[None] if single else V).astype(jnp.float32)
+    B, D, M = Vb.shape
+    windowed = state.win.shape[-1] > 0
+    R = state.C.shape[1]
+    tile, Mp = _stream_tile(D, M, R, windowed, tile_m, tile_policy)
+    if Mp != state.d2.shape[-1]:
+        raise ValueError(
+            f"state was built for a padded candidate axis of "
+            f"{state.d2.shape[-1]}, but V (M={M}) pads to {Mp} — "
+            f"pass the same V/tile configuration used at init"
+        )
+    Dp = _round_up(D, SUBLANE)
+    if (Mp, Dp) != (M, D):
+        Vb = jnp.pad(Vb, ((0, 0), (0, Dp - D), (0, Mp - M)))
+    if windowed:
+        C, d2, win, stopped, sel, dh = fused_chunk_windowed(
+            Vb, state.C, state.d2, state.win, state.t, state.stopped,
+            chunk=chunk, eps=float(eps), w=R, tile_m=tile,
+            interpret=interpret,
+        )
+    else:
+        C, d2, stopped, sel, dh = fused_chunk_exact(
+            Vb, state.C, state.d2, state.t, state.stopped,
+            chunk=chunk, eps=float(eps), tile_m=tile, interpret=interpret,
+        )
+        win = state.win
+    new_state = type(state)(state.t + chunk, stopped, C, d2, win)
+    if single:
+        return new_state, sel[0], dh[0]
+    return new_state, sel, dh

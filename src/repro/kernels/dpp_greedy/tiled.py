@@ -69,6 +69,63 @@ def _reduce_running_argmax(i, d2, mx_ref, am_ref, tile_m):
     am_ref[0, 0] = jnp.where(better, la, am_ref[0, 0])
 
 
+def _tile_update_full(V, C, d2, vj, cj, dj, stopped, j, base, i, tile_m):
+    """The exact-step math for one (D, TM) tile, on plain values.
+
+    Shared by the per-step kernel (:func:`_pass_full`, values from
+    operands) and the fused multi-step chunk kernel
+    (:func:`_chunk_pass_full`, values from VMEM-resident cells) so the
+    two paths run the identical op sequence.  ``vj (1, D)`` /
+    ``cj (1, R)`` are the winner's columns.  Returns ``(e, d2o)``.
+    """
+    lj = jnp.dot(vj, V, preferred_element_type=jnp.float32)
+    dots = jnp.dot(cj, C, preferred_element_type=jnp.float32)
+    e = (lj - dots) / dj
+    e = jnp.where(stopped, jnp.zeros_like(e), e)
+    gid = jax.lax.broadcasted_iota(jnp.int32, (1, tile_m), 1) + i * tile_m + base
+    d2_next = jnp.where(gid == j, NEG_INF, d2 - e * e)
+    d2o = jnp.where(stopped, d2, d2_next)
+    return e, d2o
+
+
+def _tile_update_windowed(
+    V, C, d2, vj, cj_post, djp, stopped, full, coss, sins, j, base, pos,
+    i, w, tile_m,
+):
+    """The windowed-step math (evict + append fused) for one tile, on
+    plain values — shared by :func:`_pass_windowed` and
+    :func:`_chunk_pass_windowed`.  ``coss``/``sins`` are length-(w-1)
+    sequences of scalar Givens coefficients.  Returns
+    ``(C_out, d2o, e)`` with ``C_out`` already holding the
+    stopped-passthrough."""
+    # ---- evict the oldest pick: first-row Cholesky downdate; the
+    # rotation residue u repairs d2 (see repro.core.windowed)
+    u = jnp.where(full, C[0:1, :], jnp.zeros((1, tile_m), jnp.float32))
+    rows = []
+    for r in range(w - 1):
+        cos = coss[r]
+        sin = sins[r]
+        row = jnp.where(full, C[r + 1 : r + 2, :], C[r : r + 1, :])
+        rows.append(cos * row + sin * u)
+        u = cos * u - sin * row
+    last = jnp.where(full, jnp.zeros((1, tile_m), jnp.float32), C[w - 1 : w, :])
+    Cpost = jnp.concatenate(rows + [last], axis=0) if w > 1 else last
+    d2e = jnp.where(full, d2 + u * u, d2)
+
+    # ---- append j against the post-eviction window (eqs. 16-18)
+    lj = jnp.dot(vj, V, preferred_element_type=jnp.float32)
+    dots = jnp.dot(cj_post, Cpost, preferred_element_type=jnp.float32)
+    e = (lj - dots) / djp
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (w, 1), 0)
+    Cnew = jnp.where(ridx == pos, e, Cpost)
+    C_out = jnp.where(stopped, C, Cnew)
+
+    gid = jax.lax.broadcasted_iota(jnp.int32, (1, tile_m), 1) + i * tile_m + base
+    d2_next = jnp.where(gid == j, NEG_INF, d2e - e * e)
+    d2o = jnp.where(stopped, d2, d2_next)
+    return C_out, d2o, e
+
+
 def _pass_full(
     v_ref, c_ref, d2_ref, vj_ref, cj_ref, flt_ref, int_ref,
     e_ref, d2o_ref, mx_ref, am_ref, *, tile_m: int,
@@ -90,17 +147,12 @@ def _pass_full(
     stopped = flt_ref[0, 1] > 0
     j = int_ref[0, 0]
     base = int_ref[0, 1]
-    d2 = d2_ref[...]
 
-    lj = jnp.dot(vj_ref[...], v_ref[...], preferred_element_type=jnp.float32)
-    dots = jnp.dot(cj_ref[...], c_ref[...], preferred_element_type=jnp.float32)
-    e = (lj - dots) / dj
-    e = jnp.where(stopped, jnp.zeros_like(e), e)
+    e, d2o = _tile_update_full(
+        v_ref[...], c_ref[...], d2_ref[...], vj_ref[...], cj_ref[...],
+        dj, stopped, j, base, i, tile_m,
+    )
     e_ref[...] = e
-
-    gid = jax.lax.broadcasted_iota(jnp.int32, (1, tile_m), 1) + i * tile_m + base
-    d2_next = jnp.where(gid == j, NEG_INF, d2 - e * e)
-    d2o = jnp.where(stopped, d2, d2_next)
     d2o_ref[...] = d2o
     _reduce_running_argmax(i, d2o, mx_ref, am_ref, tile_m)
 
@@ -127,34 +179,14 @@ def _pass_windowed(
     j = int_ref[0, 0]
     base = int_ref[0, 1]
     pos = int_ref[0, 2]
-    d2 = d2_ref[...]
-    C = c_ref[...]  # (w, TM)
+    coss = [flt_ref[0, 3 + r] for r in range(w - 1)]
+    sins = [flt_ref[0, 3 + (w - 1) + r] for r in range(w - 1)]
 
-    # ---- evict the oldest pick: first-row Cholesky downdate; the
-    # rotation residue u repairs d2 (see repro.core.windowed)
-    u = jnp.where(full, C[0:1, :], jnp.zeros((1, tile_m), jnp.float32))
-    rows = []
-    for r in range(w - 1):
-        cos = flt_ref[0, 3 + r]
-        sin = flt_ref[0, 3 + (w - 1) + r]
-        row = jnp.where(full, C[r + 1 : r + 2, :], C[r : r + 1, :])
-        rows.append(cos * row + sin * u)
-        u = cos * u - sin * row
-    last = jnp.where(full, jnp.zeros((1, tile_m), jnp.float32), C[w - 1 : w, :])
-    Cpost = jnp.concatenate(rows + [last], axis=0) if w > 1 else last
-    d2e = jnp.where(full, d2 + u * u, d2)
-
-    # ---- append j against the post-eviction window (eqs. 16-18)
-    lj = jnp.dot(vj_ref[...], v_ref[...], preferred_element_type=jnp.float32)
-    dots = jnp.dot(cj_ref[...], Cpost, preferred_element_type=jnp.float32)
-    e = (lj - dots) / djp
-    ridx = jax.lax.broadcasted_iota(jnp.int32, (w, 1), 0)
-    Cnew = jnp.where(ridx == pos, e, Cpost)
-    co_ref[...] = jnp.where(stopped, C, Cnew)
-
-    gid = jax.lax.broadcasted_iota(jnp.int32, (1, tile_m), 1) + i * tile_m + base
-    d2_next = jnp.where(gid == j, NEG_INF, d2e - e * e)
-    d2o = jnp.where(stopped, d2, d2_next)
+    C_out, d2o, _ = _tile_update_windowed(
+        v_ref[...], c_ref[...], d2_ref[...], vj_ref[...], cj_ref[...],
+        djp, stopped, full, coss, sins, j, base, pos, i, w, tile_m,
+    )
+    co_ref[...] = C_out
     d2o_ref[...] = d2o
     _reduce_running_argmax(i, d2o, mx_ref, am_ref, tile_m)
 
@@ -313,6 +345,426 @@ def tiled_update_windowed(
         interpret=interpret,
     )
     return Co[0], d2o[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-step chunk kernels (streaming emission / HBM amortization)
+#
+# One pallas_call advances ``chunk`` greedy steps: grid (B, chunk, nt),
+# step-major, tile-minor.  The Cholesky state and d2 live in *output*
+# blocks that sweep s+1 reads back (revisited block index maps ignore
+# the step dimension), so C and d2 cross the kernel boundary — one HBM
+# round-trip — once per chunk instead of once per step.  Everything the
+# next step needs from the previous one (the running argmax, the
+# winner's V / Cholesky columns and, windowed, the (w, w) window factor
+# and ring ids) is carried in constant-index (1, ·) cells that stay
+# VMEM-resident across the whole grid: the per-step JAX-level winner
+# gather / row write-back of the per-step path disappears entirely.
+#
+# Caveat (mirrors the ROADMAP's compiled-mode item): CI exercises
+# interpret mode, where revisited output blocks read back the bits the
+# previous sweep wrote.  A compiled TPU lowering must preserve that
+# read-back (non-consecutive revisits re-fetch from HBM) — on-hardware
+# validation of exactly this contract is tracked in the ROADMAP.
+# ---------------------------------------------------------------------------
+
+
+def _reduce_argmax_and_cols(i, d2, V, C, mx_ref, am_ref, wv_ref, wc_ref,
+                            tile_m):
+    """The running (max, argmax) fold of :func:`_reduce_running_argmax`
+    extended to also capture the running winner's columns — its
+    ``V[:, j]`` as a (1, D) row in ``wv_ref`` and its post-update
+    Cholesky column as a (1, R) row in ``wc_ref`` — so the next sweep
+    starts with the winner's columns already VMEM-resident."""
+
+    @pl.when(i == 0)
+    def _():
+        mx_ref[...] = jnp.full(mx_ref.shape, NEG_INF, jnp.float32)
+        am_ref[...] = jnp.zeros(am_ref.shape, jnp.int32)
+
+    lm = jnp.max(d2[0])
+    jl = jnp.argmax(d2[0]).astype(jnp.int32)
+    la = jl + i * tile_m
+    better = lm > mx_ref[0, 0]
+    mx_ref[0, 0] = jnp.where(better, lm, mx_ref[0, 0])
+    am_ref[0, 0] = jnp.where(better, la, am_ref[0, 0])
+    D, R = V.shape[0], C.shape[0]
+    vcol = jax.lax.dynamic_slice(V, (0, jl), (D, 1)).reshape(1, D)
+    ccol = jax.lax.dynamic_slice(C, (0, jl), (R, 1)).reshape(1, R)
+    wv_ref[...] = jnp.where(better, vcol, wv_ref[...])
+    wc_ref[...] = jnp.where(better, ccol, wc_ref[...])
+
+
+def _chunk_pass_full(
+    v_ref, cin_ref, d2in_ref, f0_ref, i0_ref, vj0_ref, cj0_ref,
+    cout_ref, d2out_ref, sel_ref, dh_ref,
+    stepf_ref, stepi_ref, wvc_ref, wcc_ref,
+    mxn_ref, amn_ref, wvn_ref, wcn_ref,
+    *, eps: float, tile_m: int,
+):
+    """One (step, tile) grid cell of the fused exact chunk.
+
+    Inputs: V tile (D, TM); C/d2 state tiles (read at sweep 0 only —
+    later sweeps read the revisited output blocks); f0 (1, 2) f32
+    [dj2_0, stopped_0], i0 (1, 2) i32 [j_0, t0] and the winner's
+    columns vj0 (1, D) / cj0 (1, R), all computed at the JAX level once
+    per chunk from the resumable state.
+
+    Cells: stepf (1, 2) [d_j, stopped] and stepi (1, 2) [j, t0] hold
+    the *current* step's scalars (written by tile 0, read by every
+    tile); wvc/wcc the current winner's columns; mxn/amn/wvn/wcn the
+    running argmax + columns feeding the *next* sweep.
+    """
+    s = pl.program_id(1)
+    i = pl.program_id(2)
+    eps2 = eps * eps
+    first = s == 0
+
+    @pl.when(i == 0)
+    def _setup():
+        dj2 = jnp.where(first, f0_ref[0, 0], mxn_ref[0, 0])
+        prev_stop = jnp.where(first, f0_ref[0, 1] > 0, stepf_ref[0, 1] > 0)
+        j = jnp.where(first, i0_ref[0, 0], amn_ref[0, 0])
+        t0 = i0_ref[0, 1]
+        stopped = jnp.logical_or(prev_stop, dj2 <= eps2)
+        dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+        stepf_ref[...] = jnp.stack([dj, stopped.astype(jnp.float32)])[None]
+        stepi_ref[...] = jnp.stack([j, t0]).astype(jnp.int32)[None]
+        wvc_ref[...] = jnp.where(first, vj0_ref[...], wvn_ref[...])
+        wcc_ref[...] = jnp.where(first, cj0_ref[...], wcn_ref[...])
+        sel_val = jnp.where(stopped, -1, j).astype(jnp.int32)
+        pl.store(sel_ref, (pl.dslice(0, 1), pl.dslice(s, 1)),
+                 sel_val[None, None])
+        d_val = jnp.where(stopped, 0.0, dj).astype(jnp.float32)
+        pl.store(dh_ref, (pl.dslice(0, 1), pl.dslice(s, 1)),
+                 d_val[None, None])
+
+    dj = stepf_ref[0, 0]
+    stopped = stepf_ref[0, 1] > 0
+    j = stepi_ref[0, 0]
+    t = stepi_ref[0, 1] + s
+    C = jnp.where(first, cin_ref[...], cout_ref[...])
+    d2 = jnp.where(first, d2in_ref[...], d2out_ref[...])
+    e, d2o = _tile_update_full(
+        v_ref[...], C, d2, wvc_ref[...], wcc_ref[...],
+        dj, stopped, j, 0, i, tile_m,
+    )
+    # append the new Cholesky row in place (row t; zeros once stopped,
+    # exactly as the per-step driver's dynamic_update_slice writes)
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (C.shape[0], 1), 0)
+    Cnew = jnp.where(ridx == t, e, C)
+    cout_ref[...] = Cnew
+    d2out_ref[...] = d2o
+    _reduce_argmax_and_cols(
+        i, d2o, v_ref[...], Cnew, mxn_ref, amn_ref, wvn_ref, wcn_ref, tile_m
+    )
+
+
+def _chunk_pass_windowed(
+    v_ref, cin_ref, d2in_ref, f0_ref, i0_ref, vj0_ref, cj0_ref,
+    cw0_ref, win0_ref,
+    cout_ref, d2out_ref, sel_ref, dh_ref,
+    stepf_ref, stepi_ref, wvc_ref, wcp_ref, cwc_ref, wring_ref,
+    mxn_ref, amn_ref, wvn_ref, wcn_ref,
+    *, eps: float, w: int, tile_m: int,
+):
+    """One (step, tile) grid cell of the fused sliding-window chunk.
+
+    Beyond the exact variant, two more resident cells track the window
+    through the chunk: ``cwc (w, w)`` — the window factor ``C[:, win]``
+    (maintained by applying the same eviction rotations the tiles apply
+    to their columns, its appended row filled in by whichever tile owns
+    each window member) — and ``wring (1, w)`` — the ring ids.  Tile 0
+    derives the step's eviction rotations from these cells with
+    :func:`eviction_coeffs` (the identical recurrence the per-step JAX
+    driver uses), so no JAX-level gather happens inside a chunk.
+    """
+    s = pl.program_id(1)
+    i = pl.program_id(2)
+    eps2 = eps * eps
+    first = s == 0
+
+    @pl.when(i == 0)
+    def _setup():
+        dj2 = jnp.where(first, f0_ref[0, 0], mxn_ref[0, 0])
+        prev_stop = jnp.where(first, f0_ref[0, 1] > 0, stepf_ref[0, 1] > 0)
+        j = jnp.where(first, i0_ref[0, 0], amn_ref[0, 0])
+        t0 = i0_ref[0, 1]
+        t = t0 + s
+        stopped = jnp.logical_or(prev_stop, dj2 <= eps2)
+        dj = jnp.sqrt(jnp.maximum(dj2, eps2))
+        full = jnp.logical_and(t >= w, jnp.logical_not(stopped))
+        cj_pre = jnp.where(first, cj0_ref[...], wcn_ref[...])[0]  # (w,)
+        Cw = jnp.where(first, cw0_ref[...], cwc_ref[...])  # (w, w)
+        W = jnp.where(first, win0_ref[...], wring_ref[...])  # (1, w) i32
+        cos_arr, sin_arr, cj_post, d2j = eviction_coeffs(
+            Cw, cj_pre, dj2, full, w
+        )
+        djp = jnp.sqrt(jnp.maximum(d2j, eps2))
+        pos = jnp.minimum(t, w - 1)
+        stepf_ref[...] = jnp.concatenate(
+            [
+                jnp.stack([djp, stopped.astype(jnp.float32),
+                           full.astype(jnp.float32)]),
+                cos_arr, sin_arr,
+            ]
+        )[None]
+        stepi_ref[...] = jnp.stack([j, pos, t0]).astype(jnp.int32)[None]
+        wvc_ref[...] = jnp.where(first, vj0_ref[...], wvn_ref[...])
+        wcp_ref[...] = cj_post[None]
+
+        # maintain the (w, w) window factor through evict + append:
+        # rotate its rows with the step's coefficients (the same
+        # recurrence the tiles apply to their columns) ...
+        u_w = jnp.where(full, Cw[0, :], jnp.zeros((w,), jnp.float32))
+        rows = []
+        for r in range(w - 1):
+            row = jnp.where(full, Cw[r + 1, :], Cw[r, :])
+            rows.append(cos_arr[r] * row + sin_arr[r] * u_w)
+            u_w = cos_arr[r] * u_w - sin_arr[r] * row
+        last = jnp.where(full, jnp.zeros((w,), jnp.float32), Cw[w - 1, :])
+        rotated = jnp.stack(rows + [last], axis=0)  # (w, w)
+        # ... shift out the evicted member's column / enter the winner's
+        colidx = jax.lax.broadcasted_iota(jnp.int32, (1, w), 1)
+        if w > 1:
+            shifted = jnp.concatenate(
+                [rotated[:, 1:], cj_post[:, None]], axis=1
+            )
+        else:
+            shifted = cj_post[:, None]
+        not_full = jnp.where(colidx == pos, cj_post[:, None], rotated)
+        Cw_new = jnp.where(full, shifted, not_full)
+        # row pos is the appended e-row: zero it here, the owning tiles
+        # fill in e[win_r] for their members during the sweep
+        ridxw = jax.lax.broadcasted_iota(jnp.int32, (w, 1), 0)
+        Cw_new = jnp.where(ridxw == pos, 0.0, Cw_new)
+        cwc_ref[...] = jnp.where(stopped, Cw, Cw_new)
+
+        W_shift = jnp.roll(W, -1, axis=1)
+        W1 = jnp.where(full, jnp.where(colidx == w - 1, -1, W_shift), W)
+        W_new = jnp.where(stopped, W, jnp.where(colidx == pos, j, W1))
+        wring_ref[...] = W_new
+
+        sel_val = jnp.where(stopped, -1, j).astype(jnp.int32)
+        pl.store(sel_ref, (pl.dslice(0, 1), pl.dslice(s, 1)),
+                 sel_val[None, None])
+        d_val = jnp.where(stopped, 0.0, dj).astype(jnp.float32)
+        pl.store(dh_ref, (pl.dslice(0, 1), pl.dslice(s, 1)),
+                 d_val[None, None])
+
+    djp = stepf_ref[0, 0]
+    stopped = stepf_ref[0, 1] > 0
+    full = stepf_ref[0, 2] > 0
+    coss = [stepf_ref[0, 3 + r] for r in range(w - 1)]
+    sins = [stepf_ref[0, 3 + (w - 1) + r] for r in range(w - 1)]
+    j = stepi_ref[0, 0]
+    pos = stepi_ref[0, 1]
+    C = jnp.where(first, cin_ref[...], cout_ref[...])
+    d2 = jnp.where(first, d2in_ref[...], d2out_ref[...])
+    C_out, d2o, e = _tile_update_windowed(
+        v_ref[...], C, d2, wvc_ref[...], wcp_ref[...], djp, stopped, full,
+        coss, sins, j, 0, pos, i, w, tile_m,
+    )
+    cout_ref[...] = C_out
+    d2out_ref[...] = d2o
+
+    # fill the appended window-factor row: e[win_r] for the members this
+    # tile owns (each global id lives in exactly one tile)
+    W_new = wring_ref[...]
+    for r in range(w):
+        idx = W_new[0, r]
+        loc = idx - i * tile_m
+        owned = (idx >= 0) & (loc >= 0) & (loc < tile_m) & jnp.logical_not(
+            stopped
+        )
+        val = jax.lax.dynamic_slice(
+            e, (0, jnp.clip(loc, 0, tile_m - 1)), (1, 1)
+        )[0, 0]
+        cur = pl.load(cwc_ref, (pl.dslice(pos, 1), pl.dslice(r, 1)))
+        pl.store(
+            cwc_ref, (pl.dslice(pos, 1), pl.dslice(r, 1)),
+            jnp.where(owned, val, cur[0, 0])[None, None],
+        )
+
+    _reduce_argmax_and_cols(
+        i, d2o, v_ref[...], C_out, mxn_ref, amn_ref, wvn_ref, wcn_ref, tile_m
+    )
+
+
+def _ctile_spec(rows, tile_m):
+    return pl.BlockSpec((None, rows, tile_m), lambda b, s, i: (b, 0, i))
+
+
+def _ccell_spec(rows, cols):
+    return pl.BlockSpec((None, rows, cols), lambda b, s, i: (b, 0, 0))
+
+
+def _fused_chunk_call(kernel, *, grid, in_specs, out_specs, out_shape,
+                      interpret, ins):
+    """The single ``pallas_call`` a fused chunk makes.  Kept as a named
+    seam so tests can count invocations: one call — one C/d2 HBM
+    round-trip — per chunk, however many steps the chunk spans."""
+    return pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(*ins)
+
+
+def pallas_call_structure(jaxpr, in_loop=False, counts=None):
+    """Audit a (closed) jaxpr for kernel-launch structure:
+    ``{"flat": n, "looped": n}`` pallas_call eqns, split by whether they
+    sit under a loop primitive (while/scan).  A looped launch runs once
+    per iteration — per greedy step; a flat one exactly once — per
+    chunk.  The fused chunk executors above must trace to exactly one
+    flat launch and none looped (asserted by tests/test_streaming.py
+    and gated by benchmarks/fig6_streaming.py)."""
+    if counts is None:
+        counts = {"flat": 0, "looped": 0}
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        loop = in_loop or eqn.primitive.name in ("while", "scan")
+        if eqn.primitive.name == "pallas_call":
+            counts["looped" if loop else "flat"] += 1
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                v, is_leaf=lambda x: hasattr(x, "eqns")
+                or hasattr(x, "jaxpr")
+            ):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    pallas_call_structure(sub, loop, counts)
+    return counts
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "eps", "tile_m", "interpret")
+)
+def fused_chunk_exact(V, C, d2, t0, stopped, *, chunk: int, eps: float,
+                      tile_m: int, interpret: bool = True):
+    """Advance ``chunk`` exact greedy steps in one fused pallas_call.
+
+    V (B, D, Mp) / C (B, R, Mp) / d2 (B, Mp) / stopped (B,), ``t0`` the
+    absolute step of the chunk's first selection.  Returns
+    ``(C', d2', stopped', sel (B, chunk), dh (B, chunk))``.
+    """
+    B, D, Mp = V.shape
+    R = C.shape[1]
+    nt = Mp // tile_m
+    j0 = jnp.argmax(d2, axis=1).astype(jnp.int32)
+    dj20 = jnp.take_along_axis(d2, j0[:, None], axis=1)[:, 0]
+    vj0 = jnp.take_along_axis(V, j0[:, None, None], axis=2)[:, :, 0][:, None, :]
+    cj0 = jnp.take_along_axis(C, j0[:, None, None], axis=2)[:, :, 0][:, None, :]
+    f0 = jnp.stack([dj20, stopped.astype(jnp.float32)], axis=1)[:, None, :]
+    t0b = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (B,))
+    i0 = jnp.stack([j0, t0b], axis=1)[:, None, :]
+    kernel = functools.partial(_chunk_pass_full, eps=eps, tile_m=tile_m)
+    outs = _fused_chunk_call(
+        kernel,
+        grid=(B, chunk, nt),
+        in_specs=[
+            _ctile_spec(D, tile_m), _ctile_spec(R, tile_m),
+            _ctile_spec(1, tile_m),
+            _ccell_spec(1, 2), _ccell_spec(1, 2),
+            _ccell_spec(1, D), _ccell_spec(1, R),
+        ],
+        out_specs=[
+            _ctile_spec(R, tile_m), _ctile_spec(1, tile_m),
+            _ccell_spec(1, chunk), _ccell_spec(1, chunk),
+            _ccell_spec(1, 2), _ccell_spec(1, 2),
+            _ccell_spec(1, D), _ccell_spec(1, R),
+            _ccell_spec(1, 1), _ccell_spec(1, 1),
+            _ccell_spec(1, D), _ccell_spec(1, R),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, R, Mp), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, Mp), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, chunk), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1, chunk), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 2), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 2), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, R), jnp.float32),
+        ],
+        interpret=interpret,
+        ins=(V, C, d2[:, None, :], f0, i0, vj0, cj0),
+    )
+    cout, d2out, sel, dh, stepf = outs[:5]
+    stopped_out = stepf[:, 0, 1] > 0
+    return cout, d2out[:, 0], stopped_out, sel[:, 0], dh[:, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "eps", "w", "tile_m", "interpret")
+)
+def fused_chunk_windowed(V, C, d2, win, t0, stopped, *, chunk: int,
+                         eps: float, w: int, tile_m: int,
+                         interpret: bool = True):
+    """Advance ``chunk`` sliding-window greedy steps in one fused
+    pallas_call.  ``C (B, w, Mp)`` is the window ring, ``win (B, w)``
+    the ring ids (oldest first).  Returns
+    ``(C', d2', win', stopped', sel (B, chunk), dh (B, chunk))``.
+    """
+    B, D, Mp = V.shape
+    nt = Mp // tile_m
+    j0 = jnp.argmax(d2, axis=1).astype(jnp.int32)
+    dj20 = jnp.take_along_axis(d2, j0[:, None], axis=1)[:, 0]
+    vj0 = jnp.take_along_axis(V, j0[:, None, None], axis=2)[:, :, 0][:, None, :]
+    cj0 = jnp.take_along_axis(C, j0[:, None, None], axis=2)[:, :, 0][:, None, :]
+    Cw0 = jnp.take_along_axis(C, jnp.clip(win, 0)[:, None, :], axis=2)
+    Cw0 = jnp.where((win >= 0)[:, None, :], Cw0, 0.0)  # (B, w, w)
+    win0 = win[:, None, :]
+    f0 = jnp.stack([dj20, stopped.astype(jnp.float32)], axis=1)[:, None, :]
+    t0b = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (B,))
+    i0 = jnp.stack([j0, t0b], axis=1)[:, None, :]
+    nf = 3 + 2 * (w - 1)
+    kernel = functools.partial(
+        _chunk_pass_windowed, eps=eps, w=w, tile_m=tile_m
+    )
+    outs = _fused_chunk_call(
+        kernel,
+        grid=(B, chunk, nt),
+        in_specs=[
+            _ctile_spec(D, tile_m), _ctile_spec(w, tile_m),
+            _ctile_spec(1, tile_m),
+            _ccell_spec(1, 2), _ccell_spec(1, 2),
+            _ccell_spec(1, D), _ccell_spec(1, w),
+            _ccell_spec(w, w), _ccell_spec(1, w),
+        ],
+        out_specs=[
+            _ctile_spec(w, tile_m), _ctile_spec(1, tile_m),
+            _ccell_spec(1, chunk), _ccell_spec(1, chunk),
+            _ccell_spec(1, nf), _ccell_spec(1, 3),
+            _ccell_spec(1, D), _ccell_spec(1, w),
+            _ccell_spec(w, w), _ccell_spec(1, w),
+            _ccell_spec(1, 1), _ccell_spec(1, 1),
+            _ccell_spec(1, D), _ccell_spec(1, w),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, w, Mp), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, Mp), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, chunk), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1, chunk), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, nf), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 3), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, w), jnp.float32),
+            jax.ShapeDtypeStruct((B, w, w), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, w), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, w), jnp.float32),
+        ],
+        interpret=interpret,
+        ins=(V, C, d2[:, None, :], f0, i0, vj0, cj0, Cw0, win0),
+    )
+    cout, d2out, sel, dh, stepf = outs[:5]
+    wring = outs[9]
+    stopped_out = stepf[:, 0, 1] > 0
+    return cout, d2out[:, 0], wring[:, 0], stopped_out, sel[:, 0], dh[:, 0]
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,15 @@ the candidate axis stays sharded and the per-step collectives batch
 over B, so per-slate latency amortizes against the mesh instead of
 paying B sequential round-trips.
 
+``--stream N`` switches to **chunked slate emission**: the slate is
+served through ``rerank_stream`` in N-item chunks — the greedy state
+stays sharded and device-resident between chunks, so the first chunk
+ships after N greedy steps instead of after the whole slate.  The
+report then carries ``first_chunk_s`` (time-to-first-chunk) next to
+the whole-slate ``steady_call_s``, and ``--check`` verifies the
+concatenated chunks equal the whole-slate slate index for index.
+``--stream`` serves a single request (``--batch`` must stay 1).
+
 ``--check`` additionally runs the single-device ``rerank`` (vmapped
 when ``--batch > 1``) on the same inputs and asserts the slates are
 identical (the sharded path's bit-exactness guarantee); keep M modest
@@ -27,6 +36,7 @@ when checking.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -46,6 +56,8 @@ def main(argv=None):
     ap.add_argument("--alpha", type=float, default=3.0)
     ap.add_argument("--batch", type=int, default=1,
                     help="request batch: B users' slates in one mesh call")
+    ap.add_argument("--stream", type=int, default=0,
+                    help="emit the slate in chunks of this size (0 = whole)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="verify against the single-device rerank (small M only)")
@@ -65,7 +77,15 @@ def main(argv=None):
     import numpy as np
 
     from repro.distributed.context import make_mesh_compat
-    from repro.serving.reranker import DPPRerankConfig, rerank, rerank_batch
+    from repro.serving.reranker import (
+        DPPRerankConfig,
+        rerank,
+        rerank_batch,
+        rerank_stream,
+    )
+
+    if args.stream and args.batch > 1:
+        raise SystemExit("--stream serves a single request; keep --batch 1")
 
     ndev = jax.device_count()
     mesh = make_mesh_compat((ndev,), ("data",))
@@ -98,6 +118,34 @@ def main(argv=None):
     slate.block_until_ready()
     t_steady = time.time() - t0
 
+    stream_stats = None
+    if args.stream:
+        scfg = dataclasses.replace(cfg, chunk_size=args.stream)
+        # warm pass compiles the chunk executors; timed pass measures
+        # time-to-first-chunk and whole-stream wall clock
+        for c, _ in rerank_stream(scores[0], feats, scfg):
+            c.block_until_ready()
+        t0 = time.time()
+        chunks = []
+        t_chunk1 = None
+        for c, _ in rerank_stream(scores[0], feats, scfg):
+            c.block_until_ready()
+            if t_chunk1 is None:
+                t_chunk1 = time.time() - t0
+            chunks.append(np.asarray(c))
+        t_stream = time.time() - t0
+        stream_stats = {
+            "chunk_size": args.stream,
+            "first_chunk_s": round(t_chunk1, 3),
+            "stream_total_s": round(t_stream, 3),
+            "first_chunk_vs_whole": round(t_chunk1 / max(t_steady, 1e-9), 3),
+        }
+        if args.check:
+            assert np.array_equal(
+                np.concatenate(chunks), np.asarray(slate).reshape(-1)
+            ), "streamed chunks diverged from the whole-slate slate"
+            stream_stats["check"] = "ok (chunks concatenate to the slate)"
+
     slate_np = np.asarray(slate)
     n_sel = int((slate_np >= 0).sum())
     out = {
@@ -115,6 +163,8 @@ def main(argv=None):
         "us_per_step": round(t_steady / max(N, 1) * 1e6, 1),
         "us_per_user_slate": round(t_steady / max(B, 1) * 1e6, 1),
     }
+    if stream_stats is not None:
+        out["stream"] = stream_stats
 
     if args.check:
         ref_cfg = DPPRerankConfig(

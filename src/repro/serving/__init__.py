@@ -1,2 +1,7 @@
-from repro.serving.reranker import DPPRerankConfig, rerank, rerank_batch
-from repro.serving.sharded_rerank import sharded_rerank
+from repro.serving.reranker import (
+    DPPRerankConfig,
+    rerank,
+    rerank_batch,
+    rerank_stream,
+)
+from repro.serving.sharded_rerank import sharded_rerank, sharded_rerank_stream

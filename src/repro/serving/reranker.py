@@ -27,6 +27,15 @@ All greedy variants are reached through ``repro.core.greedy_map``:
 * ``mask=`` excludes candidates (already-seen / business-filtered
   items) before the shortlist and inside greedy selection; a masked
   item can never appear in the slate.
+* ``rerank_stream`` emits the slate **incrementally**: a generator
+  yielding ``chunk_size``-item chunks (global ids + per-chunk d_hist)
+  as the greedy loop produces them, instead of blocking until the
+  whole slate is selected — the serving shape the paper's windowed
+  variant exists for (repulsion only among nearby items means a long
+  feed can start rendering after the first chunk).  Chunks concatenate
+  exactly to ``rerank``'s whole-slate result on every backend; with
+  ``mesh=`` the chunked state stays device-resident between chunks
+  (``repro.serving.sharded_rerank.sharded_rerank_stream``).
 
 ``DPPRerankConfig`` validates itself at construction (mirroring
 ``GreedySpec``): a nonsensical slate/shortlist/window/eps raises a
@@ -57,6 +66,7 @@ class DPPRerankConfig:
     axis_name: str = "data"  # mesh axis carrying the candidate shards
     tile_m: Optional[int] = None  # Pallas candidate-axis tile (None = auto)
     interpret: bool = True  # Pallas interpret mode (False on real TPU)
+    chunk_size: Optional[int] = None  # rerank_stream emission granularity
 
     def __post_init__(self):
         if self.slate_size <= 0:
@@ -67,6 +77,10 @@ class DPPRerankConfig:
             raise ValueError(f"window must be >= 1, got {self.window}")
         if self.eps < 0:
             raise ValueError(f"eps must be >= 0, got {self.eps}")
+        if self.chunk_size is not None and self.chunk_size <= 0:
+            raise ValueError(
+                f"chunk_size must be >= 1, got {self.chunk_size}"
+            )
         if self.mesh is not None and self.use_kernel:
             raise ValueError(
                 "use_kernel (Pallas) and mesh (sharded) are mutually "
@@ -99,6 +113,10 @@ class DPPRerankConfig:
             axis_name=self.axis_name,
             tile_m=self.tile_m,
             interpret=self.interpret,
+            # the jnp spec cannot carry a chunk size (its whole-slate
+            # path would silently ignore it — GreedySpec rejects that);
+            # rerank_stream passes it to greedy_map_chunks directly
+            chunk_size=self.chunk_size if backend != "jnp" else None,
         )
 
 
@@ -127,6 +145,18 @@ def rerank(
                 f"ndim={scores.ndim}; use rerank_batch for user batches"
             )
         return sharded_rerank(scores, feats, cfg, mask=mask)
+    V, m_top, top_i = _shortlist_kernel(scores, feats, cfg, mask)
+    res = greedy_map(cfg.greedy_spec(), V=V, mask=m_top)
+    sel, dh = res.indices, res.d_hist
+    out = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
+    return out.astype(jnp.int32), dh
+
+
+def _shortlist_kernel(scores, feats, cfg, mask):
+    """The top-C shortlist and its implicit DPP kernel — shared by the
+    whole-slate ``rerank`` and the chunk-emitting ``rerank_stream`` so
+    the two paths diversify the identical V.  Returns
+    ``(V (D, C), shortlist mask or None, top_i (C,) global ids)``."""
     C = min(cfg.shortlist, scores.shape[0])
     s = scores if mask is None else jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
     top_s, top_i = jax.lax.top_k(s, C)
@@ -139,10 +169,52 @@ def rerank(
         # columns are zeroed and excluded from selection by the mask
         rel = jnp.where(m_top, rel, 0.0)
     V = (f * rel[:, None]).T  # (D, C)
-    res = greedy_map(cfg.greedy_spec(), V=V, mask=m_top)
-    sel, dh = res.indices, res.d_hist
-    out = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
-    return out.astype(jnp.int32), dh
+    return V, m_top, top_i
+
+
+def rerank_stream(
+    scores: jnp.ndarray,
+    feats: jnp.ndarray,
+    cfg: DPPRerankConfig,
+    mask: Optional[jnp.ndarray] = None,
+    chunk_size: Optional[int] = None,
+):
+    """Stream one request's slate as it is selected, chunk by chunk.
+
+    Generator over ``ceil(slate_size / chunk)`` chunks, each a
+    ``(indices (c,) int32 global ids, d_hist (c,))`` pair (the last
+    chunk is short when ``chunk`` does not divide ``slate_size``; slots
+    after an eps-stop hold -1 / 0).  ``chunk_size`` overrides
+    ``cfg.chunk_size``; one of them must be set.  Concatenating the
+    chunks reproduces ``rerank(scores, feats, cfg, mask)`` exactly —
+    same shortlist, same kernel, same greedy sequence — on every
+    backend; the resumable greedy state (and, with ``cfg.mesh``, its
+    device shards) persists between chunks, so time-to-first-chunk is
+    the cost of ``chunk`` greedy steps, not of the whole slate.
+    """
+    if scores.ndim != 1:
+        raise ValueError(
+            f"rerank_stream takes a single request (scores (M,)), got "
+            f"ndim={scores.ndim}"
+        )
+    if cfg.mesh is not None:
+        from repro.serving.sharded_rerank import sharded_rerank_stream
+
+        yield from sharded_rerank_stream(
+            scores, feats, cfg, mask=mask, chunk_size=chunk_size
+        )
+        return
+    from repro.core.dispatch import greedy_map_chunks
+    from repro.core.streaming import resolve_chunk
+
+    spec = cfg.greedy_spec()
+    chunk = resolve_chunk(spec, chunk_size if chunk_size is not None
+                          else cfg.chunk_size)
+    V, m_top, top_i = _shortlist_kernel(scores, feats, cfg, mask)
+    for res in greedy_map_chunks(spec, V=V, mask=m_top, chunk_size=chunk):
+        sel = res.indices
+        out = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
+        yield out.astype(jnp.int32), res.d_hist
 
 
 def rerank_batch(

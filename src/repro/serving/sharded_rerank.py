@@ -60,6 +60,26 @@ def sharded_rerank(
     filter broadcast over the batch; False entries are excluded from
     both the shortlist and the slate.
     """
+    V, smask = _sharded_kernel(scores, feats, cfg, mask)
+    res = dpp_greedy_sharded(
+        V,
+        cfg.slate_size,
+        mesh=cfg.mesh,
+        axis_name=cfg.axis_name,
+        window=cfg.window,
+        eps=cfg.eps,
+        mask=smask,
+        tile_m=cfg.tile_m,
+        interpret=cfg.interpret,
+    )
+    return res.indices.astype(jnp.int32), res.d_hist
+
+
+def _sharded_kernel(scores, feats, cfg, mask):
+    """Sharded shortlist mask + scaled-feature kernel build — shared by
+    the whole-slate ``sharded_rerank`` and the chunk-emitting
+    ``sharded_rerank_stream`` so both diversify the identical V.
+    Returns ``(V (..., D, M), selectability mask or None)``."""
     if cfg.mesh is None:
         raise ValueError("sharded_rerank needs cfg.mesh (see DPPRerankConfig)")
     if scores.ndim not in (1, 2):
@@ -107,15 +127,49 @@ def sharded_rerank(
     if batched and feats.ndim == 2:
         feats = feats[None]  # shared features broadcast over the batch
     V = jnp.swapaxes(feats * rel[..., None], -1, -2)  # (..., D, M)
-    res = dpp_greedy_sharded(
-        V,
-        cfg.slate_size,
-        mesh=cfg.mesh,
-        axis_name=cfg.axis_name,
-        window=cfg.window,
-        eps=cfg.eps,
-        mask=smask,
-        tile_m=cfg.tile_m,
-        interpret=cfg.interpret,
+    return V, smask
+
+
+def sharded_rerank_stream(
+    scores: jnp.ndarray,
+    feats: jnp.ndarray,
+    cfg,
+    mask: Optional[jnp.ndarray] = None,
+    chunk_size: Optional[int] = None,
+):
+    """Stream a sharded rerank's slate chunk by chunk.
+
+    Generator over ``(indices (c,) int32 global ids, d_hist (c,))``
+    pairs whose concatenation reproduces ``sharded_rerank`` exactly.
+    Between chunks the greedy state stays sharded and device-resident
+    (the windowed ring ``C (w, M/P)`` per device supports unbounded
+    slates); each chunk adds one host round — the (c,)-sized results —
+    on top of the loop's per-step argmax collectives, so the first
+    items of a long feed ship after ``chunk`` steps instead of
+    ``slate_size``.
+    """
+    from repro.core.sharded import (
+        _stream_pad,
+        dpp_greedy_sharded_stream_chunk,
+        dpp_greedy_sharded_stream_init,
     )
-    return res.indices.astype(jnp.int32), res.d_hist
+    from repro.core.streaming import resolve_chunk
+
+    chunk = resolve_chunk(cfg.greedy_spec(), chunk_size if chunk_size
+                          is not None else cfg.chunk_size)
+    V, smask = _sharded_kernel(scores, feats, cfg, mask)
+    state = dpp_greedy_sharded_stream_init(
+        V, cfg.slate_size, mesh=cfg.mesh, axis_name=cfg.axis_name,
+        window=cfg.window, mask=smask, tile_m=cfg.tile_m,
+    )
+    # pad once up front; the per-chunk calls then move no O(D M) data
+    V = _stream_pad(V, state.d2.shape[-1])
+    done = 0
+    while done < cfg.slate_size:
+        c = min(chunk, cfg.slate_size - done)
+        state, sel, dh = dpp_greedy_sharded_stream_chunk(
+            V, state, c, mesh=cfg.mesh, axis_name=cfg.axis_name,
+            eps=cfg.eps, tile_m=cfg.tile_m, interpret=cfg.interpret,
+        )
+        yield sel.astype(jnp.int32), dh
+        done += c

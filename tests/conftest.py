@@ -1,0 +1,125 @@
+"""Shared fixtures for the greedy MAP parity suites.
+
+Every fast-greedy backend in the repo — the jnp incremental paths, the
+resident and tiled Pallas kernels, the candidate-sharded SPMD loop, and
+now the chunk-emitting streaming executors — is ultimately tested
+against **one oracle**: the independently-derived jnp rebuild path
+(``dpp_greedy_windowed_rebuild``: per step, rebuild the window's
+Cholesky factor from the dense kernel and re-solve every candidate;
+``window >= k`` degenerates to the exact Algorithm 1).  The
+``greedy_oracle`` fixture hands that oracle to every suite; its second
+parametrization cross-checks through the incremental jnp path, which is
+itself pinned to the rebuild oracle in tests/test_windowed.py — so a
+backend passing either parametrization is transitively locked to the
+same ground truth.
+
+``make_greedy_inputs`` is the one input builder (it replaces the three
+copy-pasted per-suite helpers: ``make_inputs`` in
+test_kernel_dpp_greedy.py / test_kernel_tiled.py and ``_problem`` in
+test_sharded.py), and ``assert_greedy_parity`` the one parity assertion
+(indices index-for-index, d_hist to the oracle's tolerance).
+
+The rebuild oracle materializes the dense (M, M) kernel — fine at test
+sizes; the huge-M acceptance tests keep the low-rank incremental
+parametrization.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import map_relevance
+from repro.core.greedy_chol import dpp_greedy_lowrank
+from repro.core.windowed import (
+    dpp_greedy_windowed_lowrank,
+    dpp_greedy_windowed_rebuild,
+)
+
+
+def make_greedy_inputs(seed, B, D, M, alpha=2.0, dtype=jnp.float32):
+    """Low-rank greedy inputs ``V`` with ``L = V^T V``.
+
+    ``alpha`` set: column-normalized features scaled by the paper's
+    relevance map (the serving-shaped distribution the kernel suites
+    use).  ``alpha=None``: plain gaussian / sqrt(D) columns (the
+    conditioning the sharded suite uses).  ``B=None`` returns a single
+    ``(D, M)`` problem, otherwise ``(B, D, M)``.
+    """
+    rng = np.random.default_rng(seed)
+    Bx = 1 if B is None else B
+    if alpha is None:
+        V = jnp.asarray(rng.normal(size=(Bx, D, M)), dtype) / np.sqrt(D)
+    else:
+        F = jnp.asarray(rng.normal(size=(Bx, D, M)), dtype)
+        F = F / jnp.maximum(jnp.linalg.norm(F, axis=1, keepdims=True), 1e-12)
+        r = jnp.asarray(rng.uniform(size=(Bx, M)), dtype)
+        V = F * map_relevance(r, alpha)[:, None, :]
+    return V[0] if B is None else V
+
+
+class GreedyOracle:
+    """Callable ground truth: ``oracle(V, k, window=, eps=, mask=)``
+    -> ``(sel (k,) int32, d_hist (k,))`` numpy arrays for a single
+    low-rank problem ``V (D, M)`` (batched ``V (B, D, M)`` is mapped
+    per problem).  ``dh_rtol``/``dh_atol`` are the d_hist tolerance a
+    fast path is held to against this derivation."""
+
+    def __init__(self, name, fn, dh_rtol, dh_atol):
+        self.name = name
+        self._fn = fn
+        self.dh_rtol = dh_rtol
+        self.dh_atol = dh_atol
+
+    def __call__(self, V, k, window=None, eps=1e-6, mask=None):
+        V = jnp.asarray(V)
+        if V.ndim == 3:
+            ms = [None] * V.shape[0] if mask is None else list(mask)
+            outs = [self._fn(V[b], k, window, eps, ms[b])
+                    for b in range(V.shape[0])]
+            return (np.stack([s for s, _ in outs]),
+                    np.stack([d for _, d in outs]))
+        return self._fn(V, k, window, eps, mask)
+
+
+def _rebuild_oracle(V, k, window, eps, mask):
+    L = V.T.astype(jnp.float32) @ V.astype(jnp.float32)
+    w = window if (window is not None and window < k) else k
+    res = dpp_greedy_windowed_rebuild(L, k, window=w, eps=eps, mask=mask)
+    return np.asarray(res.indices), np.asarray(res.d_hist)
+
+
+def _incremental_oracle(V, k, window, eps, mask):
+    V = V.astype(jnp.float32)
+    if window is not None and window < k:
+        res = dpp_greedy_windowed_lowrank(V, k, window=window, eps=eps,
+                                          mask=mask)
+    else:
+        res = dpp_greedy_lowrank(V, k, eps=eps, mask=mask)
+    return np.asarray(res.indices), np.asarray(res.d_hist)
+
+
+# the rebuild derivation regularizes with a 1e-6 jitter, so its d_hist
+# carries more noise than the incremental path's exact recurrence
+_ORACLES = {
+    "rebuild": lambda: GreedyOracle("rebuild", _rebuild_oracle, 2e-3, 1e-4),
+    "incremental": lambda: GreedyOracle(
+        "incremental", _incremental_oracle, 3e-4, 1e-5
+    ),
+}
+
+
+@pytest.fixture(params=["rebuild", "incremental"])
+def greedy_oracle(request):
+    """The single greedy MAP oracle every backend suite asserts against
+    (parametrized over the two independent jnp derivations)."""
+    return _ORACLES[request.param]()
+
+
+def assert_greedy_parity(oracle, sel, dh, V, k, window=None, eps=1e-6,
+                         mask=None):
+    """Indices must match the oracle index for index; d_hist within the
+    oracle derivation's tolerance."""
+    ref_sel, ref_dh = oracle(V, k, window=window, eps=eps, mask=mask)
+    np.testing.assert_array_equal(np.asarray(sel), ref_sel)
+    np.testing.assert_allclose(
+        np.asarray(dh), ref_dh, rtol=oracle.dh_rtol, atol=oracle.dh_atol
+    )

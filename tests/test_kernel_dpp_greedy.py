@@ -1,10 +1,11 @@
 """Shape/dtype sweep of the dpp_greedy Pallas kernel (interpret mode)
-against the pure-jnp oracle."""
+against the pure-jnp oracle (inputs and the shared ``greedy_oracle``
+fixture come from tests/conftest.py)."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.core import map_relevance, normalize_columns
+from conftest import assert_greedy_parity, make_greedy_inputs as make_inputs
 from repro.kernels.dpp_greedy import (
     TilePolicy,
     VMEM_BUDGET_BYTES,
@@ -12,17 +13,6 @@ from repro.kernels.dpp_greedy import (
     dpp_greedy_ref,
     untiled_vmem_bytes,
 )
-
-
-def make_inputs(seed, B, D, M, alpha=2.0, dtype=jnp.float32):
-    rng = np.random.default_rng(seed)
-    F = normalize_columns(jnp.asarray(rng.normal(size=(B, D, M)), dtype), eps=1e-12)
-    # normalize_columns normalizes axis 0 — do it per batch manually
-    F = jnp.asarray(rng.normal(size=(B, D, M)), dtype)
-    F = F / jnp.maximum(jnp.linalg.norm(F, axis=1, keepdims=True), 1e-12)
-    r = jnp.asarray(rng.uniform(size=(B, M)), dtype)
-    V = F * map_relevance(r, alpha)[:, None, :]
-    return V
 
 
 @pytest.mark.parametrize("B", [1, 3])
@@ -34,6 +24,20 @@ def test_kernel_matches_ref_sweep(B, D, M, k):
     sel_r, dh_r = dpp_greedy_ref(V, jnp.ones((B, M), bool), k)
     np.testing.assert_array_equal(np.asarray(sel_k), np.asarray(sel_r))
     np.testing.assert_allclose(np.asarray(dh_k), np.asarray(dh_r), rtol=3e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_kernel_matches_shared_oracle(greedy_oracle, window):
+    """Both resident kernels (exact + windowed) against the one shared
+    oracle fixture — the same ground truth every other backend suite
+    asserts against."""
+    B, D, M, k = 2, 16, 96, 8
+    V = make_inputs(61, B, D, M)
+    rng = np.random.default_rng(2)
+    mask = jnp.asarray(rng.uniform(size=(B, M)) > 0.25)
+    sel, dh = dpp_greedy(V, k, mask=mask, window=window, interpret=True)
+    assert_greedy_parity(greedy_oracle, sel, dh, V, k, window=window,
+                         eps=1e-3, mask=mask)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

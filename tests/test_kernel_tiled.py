@@ -19,9 +19,11 @@ import textwrap
 
 import numpy as np
 import pytest
+import jax
 import jax.numpy as jnp
 
-from repro.core import GreedySpec, GreedySpecError, greedy_map, map_relevance
+from conftest import assert_greedy_parity, make_greedy_inputs as make_inputs
+from repro.core import GreedySpec, GreedySpecError, greedy_map
 from repro.kernels.dpp_greedy import (
     TilePolicy,
     VMEM_BUDGET_BYTES,
@@ -43,14 +45,6 @@ def _tiles(M):
     """{M (single tile), M/2, 128} + the CI matrix tile, deduplicated."""
     ts = {M, M // 2, 128, *_ENV_TILES}
     return sorted(t for t in ts if t >= 128 and t % 128 == 0)
-
-
-def make_inputs(seed, B, D, M, alpha=2.0):
-    rng = np.random.default_rng(seed)
-    F = jnp.asarray(rng.normal(size=(B, D, M)), jnp.float32)
-    F = F / jnp.maximum(jnp.linalg.norm(F, axis=1, keepdims=True), 1e-12)
-    r = jnp.asarray(rng.uniform(size=(B, M)), jnp.float32)
-    return F * map_relevance(r, alpha)[:, None, :]
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +136,129 @@ def test_tiled_unbounded_slate():
     assert int((np.asarray(sel_e) >= 0).sum()) <= D + 3
     s = np.asarray(sel_w)[0]
     assert (s >= 0).all() and len(set(s.tolist())) == k
+
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_tiled_matches_shared_oracle(greedy_oracle, window):
+    """The tiled streaming kernels against the one shared oracle fixture
+    (the same ground truth the resident/sharded/streaming suites use)."""
+    B, D, M, k = 2, 16, 96, 8
+    V = make_inputs(67, B, D, M)
+    rng = np.random.default_rng(4)
+    mask = jnp.asarray(rng.uniform(size=(B, M)) > 0.25)
+    sel, dh = dpp_greedy(V, k, mask=mask, window=window, tile_m=128)
+    assert_greedy_parity(greedy_oracle, sel, dh, V, k, window=window,
+                         eps=1e-3, mask=mask)
+
+
+# ---------------------------------------------------------------------------
+# Interpret-mode gaps (ROADMAP): the revisited-output running argmax
+# under adversarial ties, and the vmap-of-pallas_call batching the
+# sharded tiled local update leans on
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [None, 3])
+@pytest.mark.parametrize("chunked", [False, True])
+def test_tiled_running_argmax_adversarial_ties(window, chunked):
+    """Every candidate's marginal is *exactly* float-equal to a twin in
+    the other tile (the second tile duplicates the first), so every
+    step's running argmax across the revisited (1, 1) cells is decided
+    purely by tie-breaking — it must keep the earlier (lower-index)
+    candidate, matching jnp.argmax over the concatenated axis, on both
+    the per-step sweeps and the fused chunk kernels."""
+    B, D, M, k = 1, 12, 256, 6  # two 128-tiles; tile 2 = copy of tile 1
+    half = make_inputs(71, B, D, M // 2)
+    V = jnp.concatenate([half, half], axis=2)
+    sel_r, dh_r = dpp_greedy_ref(V, jnp.ones((B, M), bool), k,
+                                 window=window)
+    if chunked:
+        from repro.kernels.dpp_greedy import (
+            dpp_greedy_stream_chunk,
+            dpp_greedy_stream_init,
+        )
+
+        state = dpp_greedy_stream_init(V, k, window=window, tile_m=128)
+        sels = []
+        for c in (2, 2, 2):
+            state, sel, _ = dpp_greedy_stream_chunk(V, state, c, tile_m=128)
+            sels.append(np.asarray(sel))
+        sel_t = np.concatenate(sels, axis=1)
+    else:
+        sel_t, _ = dpp_greedy(V, k, window=window, tile_m=128)
+    np.testing.assert_array_equal(np.asarray(sel_t), np.asarray(sel_r))
+    # the ties were real and broke low: a twin pair stays exactly tied
+    # until one member is selected, so a pick from the higher tile is
+    # only legitimate when it is the twin of an earlier pick whose
+    # eviction repaired its d2 (windowed only) — any other high-tile
+    # pick means the running argmax broke a live tie the wrong way
+    s = np.asarray(sel_t)[0]
+    assert (s >= 0).all()
+    prev = set()
+    for x in s.tolist():
+        if x >= M // 2:
+            assert window is not None and (x - M // 2) in prev, (
+                f"tie broke toward the higher tile at {x}"
+            )
+        prev.add(x)
+    assert (s[: min(len(s), 2)] < M // 2).all()  # fresh ties broke low
+
+
+@pytest.mark.parametrize("window", [None, 3])
+def test_vmap_of_tiled_update_matches_per_problem(window):
+    """The batched sharded path vmaps the per-device SPMD body, so the
+    per-step tile kernels run under vmap-of-pallas_call.  Pin that
+    batching rule directly: vmapping the shard-local update equals
+    running it per problem."""
+    from repro.kernels.dpp_greedy.tiled import (
+        eviction_coeffs,
+        tiled_update_exact,
+        tiled_update_windowed,
+    )
+
+    B, D, M, k = 3, 8, 256, 5
+    rng = np.random.default_rng(73)
+    V = make_inputs(73, B, D, M)
+    d2 = jnp.sum(V * V, axis=1)
+    j = jnp.asarray(rng.integers(0, M, size=B), jnp.int32)
+    dj = jnp.sqrt(jnp.take_along_axis(d2, j[:, None], 1))[:, 0]
+    vj = jnp.take_along_axis(V, j[:, None, None], axis=2)[:, :, 0]
+    stopped = jnp.zeros((B,), bool)
+    base = jnp.zeros((B,), jnp.int32)
+    if window is None:
+        C = jnp.asarray(rng.normal(size=(B, k, M)), jnp.float32) * 0.1
+        cj = jnp.take_along_axis(C, j[:, None, None], axis=2)[:, :, 0]
+        fn = lambda Vb, Cb, d2b, vjb, cjb, djb, st, jb, bb: (
+            tiled_update_exact(Vb, Cb, d2b, vjb, cjb, djb, st, jb, bb,
+                               tile_m=128)
+        )
+        batched = jax.vmap(fn)(V, C, d2, vj, cj, dj, stopped, j, base)
+        single = [fn(V[b], C[b], d2[b], vj[b], cj[b], dj[b], stopped[b],
+                     j[b], base[b]) for b in range(B)]
+    else:
+        w = window
+        C = jnp.asarray(rng.normal(size=(B, w, M)), jnp.float32) * 0.1
+        win = jnp.asarray(rng.integers(0, M, size=(B, w)), jnp.int32)
+        cj = jnp.take_along_axis(C, j[:, None, None], axis=2)[:, :, 0]
+        Cw = jnp.take_along_axis(C, jnp.clip(win, 0)[:, None, :], axis=2)
+        full = jnp.ones((B,), bool)
+        cos, sin, cj_post, d2j = eviction_coeffs(Cw, cj, dj * dj, full, w)
+        djp = jnp.sqrt(jnp.maximum(d2j, 1e-12))
+        pos = jnp.full((B,), w - 1, jnp.int32)
+        fn = lambda Vb, Cb, d2b, vjb, cjb, djb, st, fl, co, si, jb, bb, po: (
+            tiled_update_windowed(Vb, Cb, d2b, vjb, cjb, djb, st, fl, co,
+                                  si, jb, bb, po, w=w, tile_m=128)
+        )
+        batched = jax.vmap(fn)(V, C, d2, vj, cj_post, djp, stopped, full,
+                               cos, sin, j, base, pos)
+        single = [fn(V[b], C[b], d2[b], vj[b], cj_post[b], djp[b],
+                     stopped[b], full[b], cos[b], sin[b], j[b], base[b],
+                     pos[b]) for b in range(B)]
+    for out_b, outs in zip(batched, zip(*single)):
+        np.testing.assert_allclose(
+            np.asarray(out_b), np.stack([np.asarray(o) for o in outs]),
+            rtol=1e-6, atol=1e-7,
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from conftest import assert_greedy_parity, make_greedy_inputs
 from repro.core import (
     GreedySpec,
     GreedySpecError,
@@ -49,9 +50,9 @@ def run_subprocess(code: str) -> str:
 
 
 def _problem(seed, M=120, D=24):
-    rng = np.random.default_rng(seed)
-    V = jnp.asarray(rng.normal(size=(D, M)), jnp.float32) / np.sqrt(D)
-    return V
+    # the shared conftest builder (alpha=None = this suite's historical
+    # gaussian / sqrt(D) conditioning)
+    return make_greedy_inputs(seed, None, D, M, alpha=None)
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +129,21 @@ def test_sharded_matches_lowrank_one_device(seed):
     np.testing.assert_array_equal(np.asarray(ref.indices), np.asarray(got.indices))
     np.testing.assert_array_equal(np.asarray(ref.d_hist), np.asarray(got.d_hist))
     assert int(ref.n_selected) == int(got.n_selected)
+
+
+@pytest.mark.parametrize("window", [None, 5])
+def test_sharded_matches_shared_oracle(greedy_oracle, window):
+    """The sharded backend against the one shared oracle fixture — the
+    same ground truth the kernel and streaming suites assert against."""
+    V = _problem(7)
+    rng = np.random.default_rng(7)
+    mask = jnp.asarray(rng.uniform(size=V.shape[1]) > 0.25)
+    got = dpp_greedy_sharded(
+        V, 10, mesh=make_mesh_compat((1,), ("data",)), window=window,
+        eps=1e-6, mask=mask,
+    )
+    assert_greedy_parity(greedy_oracle, got.indices, got.d_hist, V, 10,
+                         window=window, eps=1e-6, mask=mask)
 
 
 def test_sharded_windowed_matches_one_device():
