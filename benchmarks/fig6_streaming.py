@@ -5,8 +5,9 @@ rendering after the first chunk instead of blocking on the whole
 slate).
 
 For a windowed long-slate config (N >> w) each backend serves the same
-request twice: once through whole-slate ``rerank`` and once through
-``rerank_stream`` with ``chunk_size`` items per chunk.  Reported per
+request twice: once through whole-slate ``Reranker.rerank`` and once
+through ``Reranker.stream`` with ``chunk_size`` items per chunk.
+Reported per
 row: steady-state time-to-first-chunk (the headline number), the
 whole-slate latency it undercuts, the full-stream wall clock (the
 price of chunking), and a parity flag — the concatenated chunks must
@@ -35,7 +36,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.serving.reranker import DPPRerankConfig, rerank, rerank_stream
+from repro.serving import DPPRerankConfig, Reranker, RerankRequest
 
 
 def setup(M, D, seed=0):
@@ -47,25 +48,29 @@ def setup(M, D, seed=0):
 
 
 def time_whole(scores, feats, cfg, trials):
-    rerank(scores, feats, cfg)[0].block_until_ready()  # compile + warm
+    rr = Reranker(cfg)
+    req = RerankRequest(scores=scores, feats=feats)
+    rr.rerank(req)[0].block_until_ready()  # compile + warm
     best = float("inf")
     for _ in range(trials):
         t0 = time.perf_counter()
-        slate, _ = rerank(scores, feats, cfg)
+        slate, _ = rr.rerank(req)
         slate.block_until_ready()
         best = min(best, time.perf_counter() - t0)
     return best, np.asarray(slate)
 
 
 def time_stream(scores, feats, cfg, trials):
-    for c, _ in rerank_stream(scores, feats, cfg):  # compile + warm
+    rr = Reranker(cfg)
+    req = RerankRequest(scores=scores, feats=feats)
+    for c, _ in rr.stream(req):  # compile + warm
         c.block_until_ready()
     best_first = best_total = float("inf")
     for _ in range(trials):
         chunks = []
         t0 = time.perf_counter()
         t_first = None
-        for c, _ in rerank_stream(scores, feats, cfg):
+        for c, _ in rr.stream(req):
             c.block_until_ready()
             if t_first is None:
                 t_first = time.perf_counter() - t0

@@ -25,6 +25,7 @@ def main() -> None:
         fig4_windowed,
         fig5_sharded,
         fig6_streaming,
+        fig7_serving,
     )
 
     print("# Figure 1: original greedy MAP vs Div-DPP (speedup, exactness)")
@@ -39,6 +40,8 @@ def main() -> None:
     fig5_sharded.main(fast_mode=fast)
     print("# Figure 6: streaming slate emission, time-to-first-chunk vs whole")
     fig6_streaming.main(fast_mode=fast)
+    print("# Figure 7: continuous-batching router, QPS vs latency percentiles")
+    fig7_serving.main(fast_mode=fast)
 
     print("# Roofline (from dry-run artifacts, if present)")
     try:

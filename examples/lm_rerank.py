@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.configs import get_arch
 from repro.core import slate_diversity, top_n_select
 from repro.models import transformer as tfm
-from repro.serving.reranker import DPPRerankConfig, rerank
+from repro.serving import DPPRerankConfig, Reranker, RerankRequest
 
 cfg = get_arch("qwen1.5-4b").reduced()
 params = tfm.init_params(jax.random.PRNGKey(0), cfg)
@@ -28,9 +28,9 @@ emb /= np.maximum(np.linalg.norm(emb, axis=1, keepdims=True), 1e-9)
 query = emb[0]  # a context vector
 scores = emb @ query
 
-slate, _ = rerank(
-    jnp.asarray(scores), jnp.asarray(emb),
-    DPPRerankConfig(slate_size=10, shortlist=64, alpha=4.0),
+rr = Reranker(DPPRerankConfig(slate_size=10, shortlist=64, alpha=4.0))
+slate, _ = rr.rerank(
+    RerankRequest(scores=jnp.asarray(scores), feats=jnp.asarray(emb))
 )
 slate = np.asarray(slate)
 Ssim = emb @ emb.T

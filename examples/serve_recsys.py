@@ -1,7 +1,9 @@
 """End-to-end serving driver: CTR scoring + Div-DPP slate diversification
 over batched requests (the paper's production scenario), followed by a
 streaming-emission demo — a long windowed feed served chunk by chunk
-through ``rerank_stream`` instead of blocking on the whole slate.
+through ``Reranker.stream`` instead of blocking on the whole slate —
+and a continuous-batching demo where heterogeneous live requests share
+one micro-batch through ``Reranker.submit``.
 
   PYTHONPATH=src python examples/serve_recsys.py
 """
@@ -18,27 +20,73 @@ def stream_demo():
     import numpy as np
     import jax.numpy as jnp
 
-    from repro.serving import DPPRerankConfig, rerank_stream
+    from repro.serving import DPPRerankConfig, Reranker, RerankRequest
 
     rng = np.random.default_rng(0)
     M, D = 2000, 32
     feats = rng.normal(size=(M, D)).astype(np.float32)
     feats /= np.linalg.norm(feats, axis=1, keepdims=True)
     scores = jnp.asarray(rng.uniform(size=M).astype(np.float32))
-    cfg = DPPRerankConfig(
+    rr = Reranker(DPPRerankConfig(
         slate_size=40,      # a feed, not a panel — longer than the window
         shortlist=500,
         alpha=3.0,
         window=8,           # diversity against the last 8 items only
         chunk_size=10,      # emit the feed 10 items at a time
         eps=1e-6,
-    )
+    ))
     print("# streaming feed (window=8, 10 items per chunk):")
     for n, (ids, d_hist) in enumerate(
-        rerank_stream(scores, jnp.asarray(feats), cfg)
+        rr.stream(RerankRequest(scores=scores, feats=jnp.asarray(feats)))
     ):
         shown = " ".join(f"{int(i):4d}" for i in ids)
         print(f"chunk {n}: [{shown}]  min marginal {float(d_hist.min()):.4f}")
+
+
+def router_demo():
+    """Continuous batching: four users with different slate lengths and
+    already-seen masks arrive together; ``submit`` coalesces them into
+    one shared micro-batch (one compiled geometry) instead of serving
+    them one slate at a time."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.serving import (
+        DPPRerankConfig,
+        Reranker,
+        RerankRequest,
+        RouterConfig,
+    )
+
+    rng = np.random.default_rng(1)
+    M, D = 1000, 32
+    feats = rng.normal(size=(M, D)).astype(np.float32)
+    feats /= np.linalg.norm(feats, axis=1, keepdims=True)
+    feats = jnp.asarray(feats)
+    rr = Reranker(
+        DPPRerankConfig(slate_size=16, shortlist=200, alpha=3.0,
+                        chunk_size=4, eps=1e-6),
+        router_config=RouterConfig(slots=4, chunk_size=4),
+    )
+    handles = []
+    for u in range(4):
+        mask = None
+        if u % 2:  # some users have already seen part of the pool
+            m = np.ones(M, bool)
+            m[rng.choice(M, size=M // 5, replace=False)] = False
+            mask = jnp.asarray(m)
+        handles.append(rr.submit(RerankRequest(
+            scores=jnp.asarray(rng.uniform(size=M).astype(np.float32)),
+            feats=feats, slate_size=8 + 2 * u, mask=mask, rid=f"user{u}",
+        )))
+    rr.router.drain()
+    print("# continuous-batching router (4 heterogeneous users, 4 slots):")
+    for h in handles:
+        ids, _ = h.slate()
+        print(f"{h.rid}: k={len(ids)} slate={ids.tolist()}")
+    st = rr.router.stats
+    print(f"batch fill ratio {st.fill_ratio:.2f}, "
+          f"mean TTFC {st.mean_ttfc * 1e3:.1f} ms")
 
 
 if __name__ == "__main__":
@@ -47,3 +95,4 @@ if __name__ == "__main__":
         "--slate", "10", "--shortlist", "200", "--alpha", "3.0",
     ])
     stream_demo()
+    router_demo()

@@ -2,7 +2,7 @@
 vocab=262144 — 5:1 local:global sliding-window hybrid, 128k-class context.
 [hf:google/gemma-3-1b-pt; unverified]
 
-Adaptation notes (DESIGN.md §4): head_dim derived as d_model//n_heads=168
+Adaptation notes: head_dim derived as d_model//n_heads=168
 (the HF release uses 128 with a separate head width; the assignment
 config pins d_model/heads, so we derive).  Local window = 1024 tokens,
 every 6th layer global — the published 5:1 pattern.  long_500k runs for

@@ -37,8 +37,13 @@ from repro.core.sharded import dpp_greedy_sharded, sharded_topk
 from repro.core.streaming import (
     GreedyState,
     greedy_chunk,
+    greedy_chunk_slots,
     greedy_init,
+    greedy_slot_state,
+    greedy_slots_init,
     greedy_step,
+    state_evict,
+    state_splice,
 )
 from repro.core.greedy_naive import greedy_map_naive
 from repro.core.baselines import (
@@ -64,6 +69,11 @@ __all__ = [
     "greedy_init",
     "greedy_step",
     "greedy_chunk",
+    "greedy_chunk_slots",
+    "greedy_slot_state",
+    "greedy_slots_init",
+    "state_evict",
+    "state_splice",
     "dpp_greedy_sharded",
     "sharded_topk",
     "dpp_greedy_windowed",

@@ -44,8 +44,8 @@ history agrees to ~1 ulp — XLA may compile the per-shard ``(D, M/P)``
 reductions with a different op order than the ``(D, M)`` shapes.
 
 Front doors: ``greedy_map(GreedySpec(backend="sharded", mesh=...))``
-dispatches here; serving goes through
-``repro.serving.sharded_rerank`` (which also replaces the single-device
+dispatches here; serving goes through ``repro.serving.Reranker`` with
+``cfg.mesh`` set (which also replaces the single-device
 ``jax.lax.top_k`` shortlist with ``sharded_topk``); the
 ``repro.launch.serve_sharded`` driver and ``benchmarks/fig5_sharded.py``
 demonstrate the path end to end on a host-device mesh.
@@ -436,7 +436,7 @@ def _stream_init_fn(mesh, axis_name: str, batched: bool = False):
 def _stream_chunk_fn(
     mesh, axis_name: str, chunk: int, w: Optional[int], eps: float,
     batched: bool = False, tile_m: Optional[int] = None,
-    interpret: bool = True,
+    interpret: bool = True, t_batched: bool = False,
 ):
     """Compiled shard_map advancing ``chunk`` greedy steps on resumable
     sharded state.  The per-device loop body is built from the same step
@@ -504,12 +504,18 @@ def _stream_chunk_fn(
 
     if batched:
         nstate = len(state_in)
-        body = jax.vmap(body, in_axes=(0,) * (1 + nstate) + (None,))
+        # t_batched: the continuous-batching slot layout carries a
+        # per-slot step counter t (B,) (slots join mid-flight at
+        # heterogeneous progress — repro.core.streaming slot executors);
+        # the uniform batch paths keep the shared scalar
+        body = jax.vmap(
+            body, in_axes=(0,) * (1 + nstate) + (0 if t_batched else None,)
+        )
         bat = lambda spec: P(None, *spec)
         in_specs = (
             (P(None, None, axis_name),)
             + tuple(bat(s) for s in state_in)
-            + (P(),)
+            + (P(None) if t_batched else P(),)
         )
         out_specs = tuple(bat(s) for s in state_out) + (
             P(None, None), P(None, None),
@@ -615,13 +621,22 @@ def dpp_greedy_sharded_stream_chunk(
     shaped ``(chunk,)`` single / ``(B, chunk)`` batched, global
     candidate ids.  Chunks concatenate exactly to
     ``dpp_greedy_sharded``'s whole-slate result.
+
+    A batched state may carry either the shared scalar step counter
+    ``t ()`` (uniform batch — every lane started together) or a
+    per-slot ``t (B,)`` (the continuous-batching slot layout, where
+    requests join and leave mid-flight; see the slot executors in
+    ``repro.core.streaming``) — the per-device step bodies consume
+    ``t`` per lane either way.
     """
     batched = V.ndim == 3
     V = _stream_pad(V, state.d2.shape[-1])
     windowed = state.win.shape[-1] > 0
     w = state.win.shape[-1] if windowed else None
+    t_batched = batched and jnp.ndim(state.t) == 1
     fn = _stream_chunk_fn(
-        mesh, axis_name, chunk, w, float(eps), batched, tile_m, interpret
+        mesh, axis_name, chunk, w, float(eps), batched, tile_m, interpret,
+        t_batched,
     )
     if windowed:
         C, d2, win, stopped, sel, dh = fn(

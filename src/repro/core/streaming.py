@@ -35,7 +35,8 @@ layout, and the sharded state globally-shaped sharded arrays.  Always
 thread a state back into the same ``spec`` (and kernel operand) that
 created it.
 
-The serving front door is ``repro.serving.reranker.rerank_stream``; the
+The serving front door is ``repro.serving.Reranker.stream`` (and the
+continuous-batching router over the slot substrate); the
 dispatch-level generator is ``repro.core.dispatch.greedy_map_chunks``.
 """
 from __future__ import annotations
@@ -245,3 +246,153 @@ def greedy_step(spec, state: GreedyState, *, L=None, V=None):
     (-1 / 0 once eps-stopped).  Sugar for a chunk of one."""
     state, sel, dh = greedy_chunk(spec, state, L=L, V=V, chunk_size=1)
     return state, sel[..., 0], dh[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Slot-batched execution — the continuous-batching substrate
+# ---------------------------------------------------------------------------
+#
+# The serving router (``repro.serving.router``) coalesces heterogeneous
+# live requests into one padded micro-batch of S *slots* and advances
+# all of them with a single chunk call per cycle.  Unlike the batched
+# whole-slate paths — where every lane starts together — slots join and
+# leave mid-flight (a freed slot is respliced with a brand-new request
+# while its neighbours are deep into their slates), so the slot state
+# carries a **per-slot step counter** ``t (S,)`` instead of the scalar
+# the uniform batch paths share.  The per-step bodies already consume
+# ``t`` per lane (it only feeds the Cholesky row index and the ring
+# position), so the same op sequence runs; a slot's selections are
+# bitwise those of a single-request state at the same ``t``.
+#
+# Layout: every leaf gains a leading slot axis — jnp exact
+# ``C (S, M, k)``, windowed ``C (S, w, M)``, Pallas ``(S, R, Mp)``,
+# sharded the global per-device views — and parked (empty) slots hold
+# ``stopped=True`` with ``d2`` at -inf, so they select -1 at zero
+# numerical risk while occupied neighbours compute.
+
+
+def greedy_slot_state(spec, V, mask=None) -> GreedyState:
+    """Single-request state in ``spec``'s slot layout.
+
+    ``spec.k`` is the slot *capacity* (the router's ``max_slate``), not
+    the request's own slate length — every slot shares one Cholesky
+    geometry so states splice into any slot; a request simply stops
+    consuming after its own ``k`` selections.  ``V (D, M)`` must already
+    be padded to the router's bucket width (mask False over padding).
+    """
+    if spec.sharded():
+        from repro.core.sharded import dpp_greedy_sharded_stream_init
+
+        return dpp_greedy_sharded_stream_init(
+            V, spec.k, mesh=spec.mesh, axis_name=spec.axis_name,
+            window=spec.window, mask=mask, tile_m=spec.tile_m,
+        )
+    if spec.backend == "pallas":
+        from repro.kernels.dpp_greedy import dpp_greedy_stream_init
+
+        st = dpp_greedy_stream_init(
+            V, spec.k, mask=mask, window=spec.window, tile_m=spec.tile_m
+        )
+        # squeeze the kernels' (1, ...) batch leaves to the slot layout
+        return GreedyState(st.t, st.stopped[0], st.C[0], st.d2[0], st.win[0])
+    return _init_jnp(spec.k, spec.window, None, V, mask)
+
+
+def slot_pad_v(spec, V, state):
+    """Pad ``V`` to the slot executor's device geometry (Pallas (Dp, Mp)
+    padding, sharded mesh/tile quantum; identity on jnp) so the per-cycle
+    chunk calls move no O(D M) data."""
+    if spec.sharded():
+        from repro.core.sharded import _stream_pad
+
+        return _stream_pad(V, state.d2.shape[-1])
+    if spec.backend == "pallas":
+        from repro.kernels.dpp_greedy import dpp_greedy_stream_pad
+
+        return dpp_greedy_stream_pad(V, state)
+    return V
+
+
+def greedy_slots_init(spec, slots: int, D: int, M: int):
+    """Parked S-slot batch state + its zeroed V operand.
+
+    Returns ``(state, V_slots)``: every slot is parked (``stopped``,
+    ``d2`` -inf, ``t`` 0) and ``V_slots`` is zeros in the executor
+    geometry — admit requests with :func:`state_splice`, free slots with
+    :func:`state_evict`.  ``M`` is the router's padded bucket width and
+    ``spec.k`` the per-slot capacity (see :func:`greedy_slot_state`).
+    """
+    if slots < 1:
+        raise ValueError(f"slots must be >= 1, got {slots}")
+    Vz = jnp.zeros((D, M), jnp.float32)
+    single = greedy_slot_state(spec, Vz, mask=jnp.zeros((M,), bool))
+    single = single._replace(stopped=jnp.asarray(True))
+    state = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (slots,) + x.shape).copy(), single
+    )
+    Vp = slot_pad_v(spec, Vz, state)
+    V_slots = jnp.zeros((slots,) + Vp.shape, Vp.dtype)
+    return state, V_slots
+
+
+def state_splice(state: GreedyState, single: GreedyState, slot) -> GreedyState:
+    """Write a single-request state (``greedy_slot_state``, same spec and
+    geometry) into ``slot`` of a slot-batched state.  ``slot`` may be a
+    traced/int index — splicing never retriggers compilation."""
+    i = jnp.asarray(slot, jnp.int32)
+    return jax.tree_util.tree_map(
+        lambda b, s: b.at[i].set(s.astype(b.dtype)), state, single
+    )
+
+
+def state_evict(state: GreedyState, slot) -> GreedyState:
+    """Park ``slot``: eps-stopped with every candidate at -inf, step
+    counter rewound — the slot selects -1 until a new request is
+    spliced in.  The freed Cholesky rows are zeroed so a later splice
+    starts from the same bits as a fresh single-request state."""
+    i = jnp.asarray(slot, jnp.int32)
+    win = state.win.at[i].set(-1) if state.win.shape[-1] else state.win
+    return GreedyState(
+        state.t.at[i].set(0),
+        state.stopped.at[i].set(True),
+        state.C.at[i].set(0.0),
+        state.d2.at[i].set(NEG_INF),
+        win,
+    )
+
+
+@partial(jax.jit, static_argnames=("chunk", "eps"))
+def _chunk_lowrank_slots(V, state, chunk: int, eps: float):
+    # one lane per slot; _chunk_body consumes the per-slot t scalar it
+    # sees inside its lane, so heterogeneous progress just works
+    return jax.vmap(
+        lambda v, s: _chunk_body(lambda j: v[:, j] @ v, s, chunk, eps)
+    )(V, state)
+
+
+def greedy_chunk_slots(spec, state: GreedyState, V_slots, chunk: int):
+    """Advance every slot ``chunk`` greedy steps in one batched call.
+
+    ``V_slots (S, D*, M*)`` is the stacked per-slot kernel operand in
+    executor geometry (``greedy_slots_init`` / ``slot_pad_v``).  Returns
+    ``(state, sel (S, chunk), d_hist (S, chunk))`` — parked and stopped
+    slots yield -1 / 0.  One jit cache entry per (geometry, chunk): the
+    per-request k / mask / progress all live in data, never in statics.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    if spec.sharded():
+        from repro.core.sharded import dpp_greedy_sharded_stream_chunk
+
+        return dpp_greedy_sharded_stream_chunk(
+            V_slots, state, chunk, mesh=spec.mesh, axis_name=spec.axis_name,
+            eps=spec.eps, tile_m=spec.tile_m, interpret=spec.interpret,
+        )
+    if spec.backend == "pallas":
+        from repro.kernels.dpp_greedy import dpp_greedy_stream_chunk
+
+        return dpp_greedy_stream_chunk(
+            V_slots, state, chunk, eps=spec.eps, tile_m=spec.tile_m,
+            interpret=spec.interpret,
+        )
+    return _chunk_lowrank_slots(V_slots, state, chunk, float(spec.eps))

@@ -21,7 +21,7 @@ _RULES: contextvars.ContextVar[Optional[Mapping[str, AxisVal]]] = contextvars.Co
     "axis_rules", default=None
 )
 
-# Canonical rule tables (DESIGN.md §6).  "dp" is the pure-data axis name
+# Canonical rule tables (sharding rules; DESIGN.md §4).  "dp" is the pure-data axis name
 # set; on the multi-pod mesh the pod axis composes with data.
 def single_pod_rules() -> Mapping[str, AxisVal]:
     return {

@@ -211,6 +211,13 @@ def dpp_greedy_stream_chunk(
     exact).  Returns ``(state, sel, dh)`` with ``sel``/``dh`` shaped
     ``(chunk,)`` for a single-problem ``V (D, M)`` and ``(B, chunk)``
     batched.
+
+    ``state.t`` may be the shared scalar the uniform batch paths use
+    or a per-lane ``(B,)`` counter (the continuous-batching slot
+    layout of ``repro.core.streaming`` — slots join mid-flight at
+    heterogeneous progress): the fused kernels carry ``t`` per grid
+    lane in their ``stepi`` cells either way, so each lane's Cholesky
+    row index / ring position follows its own counter.
     """
     single = V.ndim == 2
     Vb = (V[None] if single else V).astype(jnp.float32)

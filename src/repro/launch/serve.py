@@ -25,7 +25,7 @@ from repro.configs import get_arch
 from repro.core import mean_slate_diversity, top_n_select
 from repro.data import recsys_batches
 from repro.models import recsys as recsys_mod
-from repro.serving.reranker import DPPRerankConfig, rerank_batch
+from repro.serving import DPPRerankConfig, Reranker, RerankRequest
 
 
 def main(argv=None):
@@ -47,10 +47,10 @@ def main(argv=None):
     params = recsys_mod.init_params(jax.random.PRNGKey(0), cfg)
     Mc = min(args.candidates, cfg.vocab_sizes[cfg.item_field])
     B = args.requests
-    rr = DPPRerankConfig(
+    rr = Reranker(DPPRerankConfig(
         slate_size=args.slate, shortlist=min(args.shortlist, Mc),
         alpha=args.alpha, use_kernel=args.use_kernel,
-    )
+    ))
 
     # candidate item ids are shared; user contexts vary per request
     cand = jnp.arange(Mc, dtype=jnp.int32)
@@ -74,7 +74,7 @@ def main(argv=None):
 
         scores = jax.vmap(score_one)(user_ids)  # (B, Mc)
         feats = recsys_mod.item_embeddings(params, cand, cfg)  # (Mc, D)
-        slates, dh = rerank_batch(scores, feats, rr)
+        slates, dh = rr.rerank(RerankRequest(scores=scores, feats=feats))
         return scores, slates
 
     t0 = time.time()

@@ -14,13 +14,13 @@ device only ever holds a (D, M/P) column shard of the scaled feature
 matrix plus its slice of the greedy state.
 
 ``--batch B`` serves a request batch of B users through the same mesh
-in one ``rerank_batch`` call (per-user scores over shared features):
+in one ``Reranker.rerank`` call (per-user scores over shared features):
 the candidate axis stays sharded and the per-step collectives batch
 over B, so per-slate latency amortizes against the mesh instead of
 paying B sequential round-trips.
 
 ``--stream N`` switches to **chunked slate emission**: the slate is
-served through ``rerank_stream`` in N-item chunks — the greedy state
+served through ``Reranker.stream`` in N-item chunks — the greedy state
 stays sharded and device-resident between chunks, so the first chunk
 ships after N greedy steps instead of after the whole slate.  The
 report then carries ``first_chunk_s`` (time-to-first-chunk) next to
@@ -77,12 +77,7 @@ def main(argv=None):
     import numpy as np
 
     from repro.distributed.context import make_mesh_compat
-    from repro.serving.reranker import (
-        DPPRerankConfig,
-        rerank,
-        rerank_batch,
-        rerank_stream,
-    )
+    from repro.serving import DPPRerankConfig, Reranker, RerankRequest
 
     if args.stream and args.batch > 1:
         raise SystemExit("--stream serves a single request; keep --batch 1")
@@ -105,9 +100,11 @@ def main(argv=None):
         window=args.window or None,
         mesh=mesh,
     )
-    serve = rerank_batch if B > 1 else (
-        lambda s, f, c: rerank(s[0], f, c)
-    )
+    def serve(s, f, c):
+        # one mesh call for the whole user batch; a single request drops
+        # the batch axis so the (M,) fast path serves it
+        req = RerankRequest(scores=s if B > 1 else s[0], feats=f)
+        return Reranker(c).rerank(req)
 
     t0 = time.time()
     slate, dh = serve(scores, feats, cfg)
@@ -121,14 +118,16 @@ def main(argv=None):
     stream_stats = None
     if args.stream:
         scfg = dataclasses.replace(cfg, chunk_size=args.stream)
+        session = Reranker(scfg)
+        sreq = RerankRequest(scores=scores[0], feats=feats)
         # warm pass compiles the chunk executors; timed pass measures
         # time-to-first-chunk and whole-stream wall clock
-        for c, _ in rerank_stream(scores[0], feats, scfg):
+        for c, _ in session.stream(sreq):
             c.block_until_ready()
         t0 = time.time()
         chunks = []
         t_chunk1 = None
-        for c, _ in rerank_stream(scores[0], feats, scfg):
+        for c, _ in session.stream(sreq):
             c.block_until_ready()
             if t_chunk1 is None:
                 t_chunk1 = time.time() - t0

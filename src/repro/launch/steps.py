@@ -25,7 +25,7 @@ from repro.models import gnn as gnn_mod
 from repro.models import recsys as recsys_mod
 from repro.models import transformer as tfm
 from repro.optim import AdamWConfig, adamw_init, adamw_update
-from repro.serving.reranker import DPPRerankConfig, rerank
+from repro.serving import DPPRerankConfig, Reranker, RerankRequest
 
 
 @dataclasses.dataclass
@@ -244,6 +244,7 @@ def _recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh, rules, acfg: AdamWConfi
     Mc_p = _round_up(Mc, 512)  # pad so the candidate axis shards evenly
     b_axes = batch_axes_for(rules, Mc_p, mesh)
     rr = DPPRerankConfig(slate_size=50, shortlist=1000, alpha=4.0)
+    rr_session = Reranker(rr)
 
     def step(params, batch):
         user = batch["user_ids"]  # (1, F, H)
@@ -266,7 +267,7 @@ def _recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh, rules, acfg: AdamWConfi
         scores = recsys_mod.serve_scores(params, ids, cfg)
         scores = jnp.where(pad_mask, scores, -jnp.inf)  # padding never wins
         feats = recsys_mod.item_embeddings(params, cand, cfg)
-        slate, dh = rerank(scores, feats, rr)
+        slate, dh = rr_session.rerank(RerankRequest(scores=scores, feats=feats))
         return slate, dh
 
     batch = {

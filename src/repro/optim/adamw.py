@@ -1,6 +1,6 @@
 """AdamW with decoupled weight decay, f32 moments over (possibly bf16)
 params — the memory layout sized for 16 GB/chip at 480 B params / 512
-chips (DESIGN.md §6): params bf16 (2B) + m,v f32 (8B) = 10 B/param.
+chips: params bf16 (2B) + m,v f32 (8B) = 10 B/param.
 """
 from __future__ import annotations
 

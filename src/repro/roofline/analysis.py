@@ -1,4 +1,4 @@
-"""Three-term roofline from a compiled dry-run artifact (DESIGN.md §7).
+"""Three-term roofline from a compiled dry-run artifact (reported via benchmarks/run.py, DESIGN.md §7).
 
 Hardware model: TPU v5e —
   197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.

@@ -1,7 +1,38 @@
+"""DPP rerank serving.
+
+New code goes through the session API: ``Reranker(cfg)`` +
+``RerankRequest`` (``repro.serving.api``) and, for continuous batching,
+``RerankRouter`` (``repro.serving.router``).  The function-per-shape
+surface (``rerank`` / ``rerank_batch`` / ``rerank_stream`` /
+``sharded_rerank`` / ``sharded_rerank_stream``) survives one release as
+``DeprecationWarning`` shims.
+"""
+from repro.serving.api import Reranker, RerankRequest
 from repro.serving.reranker import (
     DPPRerankConfig,
     rerank,
     rerank_batch,
     rerank_stream,
 )
+from repro.serving.router import (
+    RerankRouter,
+    RouterConfig,
+    RouterStats,
+    SlateHandle,
+)
 from repro.serving.sharded_rerank import sharded_rerank, sharded_rerank_stream
+
+__all__ = [
+    "DPPRerankConfig",
+    "Reranker",
+    "RerankRequest",
+    "RerankRouter",
+    "RouterConfig",
+    "RouterStats",
+    "SlateHandle",
+    "rerank",
+    "rerank_batch",
+    "rerank_stream",
+    "sharded_rerank",
+    "sharded_rerank_stream",
+]

@@ -1,0 +1,316 @@
+"""The serving front door: one session object, one request object.
+
+``Reranker(cfg)`` replaces the six-way function surface the serving
+layer grew across PRs 1-5 (``rerank``, ``rerank_batch``,
+``rerank_stream``, ``sharded_rerank``, ``sharded_rerank_stream``, plus
+per-driver glue).  One session holds the model-side configuration — the
+knobs that shape compiled computations (window, eps, backend, mesh,
+tile_m, chunk_size, alpha) — and every call supplies a
+:class:`RerankRequest` carrying the request-side knobs (slate length,
+shortlist width, candidate mask, deadline).  The split is what lets the
+continuous-batching router (``repro.serving.router``) vary k and mask
+per live request without ever re-jitting: request knobs live in data
+and host-side loop bounds, never in compiled statics.
+
+Dispatch is by configuration and request shape, not by function name:
+
+* ``cfg.mesh`` set          -> candidate-sharded SPMD paths;
+* ``scores (B, M)``         -> the whole user batch on one mesh
+                               (or a vmap of the single-device path);
+* ``cfg.use_kernel``        -> Pallas kernels;
+* otherwise                 -> the jnp reference path.
+
+Methods::
+
+    out = rr.rerank(req)              # whole slate(s), blocking
+    for ids, dh in rr.stream(req):    # chunk-by-chunk emission
+    handle = rr.submit(req)           # continuous-batching router
+    handle.result()
+
+``stream`` prepares eagerly: validation, the top-C shortlist, the
+greedy state, and the kernel-operand padding all happen at call time —
+once, O(M) — and each generator resume does only O(chunk) host-side
+work (the previous serving generator re-entered validation per resume
+and deferred the shortlist to the first ``next()``).
+
+The legacy functions remain as thin shims that emit a
+``DeprecationWarning`` and delegate here — one release, then they go.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch import greedy_map
+from repro.serving.reranker import DPPRerankConfig, _shortlist_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class RerankRequest:
+    """One rerank request: the data plus the request-side knobs.
+
+    ``scores`` is ``(M,)`` (single) or ``(B, M)`` (user batch);
+    ``feats`` is ``(M, D)`` — shared across a batch — or per-user
+    ``(B, M, D)``.  ``slate_size`` / ``shortlist`` default to the
+    session config's values; ``mask`` (``(M,)`` or ``(B, M)``) marks
+    selectable candidates; ``deadline`` is a per-request latency budget
+    in seconds, honoured by the router (timeout eviction returns the
+    partial slate with ``timed_out=True``).  ``rid`` is an opaque
+    caller tag echoed back on router handles.
+
+    Validates at construction, like ``GreedySpec`` — a nonsensical
+    request raises ``ValueError`` when it is built, not as a shape
+    error inside a jitted serve step.
+    """
+
+    scores: Any
+    feats: Any
+    slate_size: Optional[int] = None
+    shortlist: Optional[int] = None
+    mask: Optional[Any] = None
+    deadline: Optional[float] = None
+    rid: Optional[Any] = None
+
+    def __post_init__(self):
+        if self.slate_size is not None and self.slate_size <= 0:
+            raise ValueError(
+                f"slate_size must be >= 1, got {self.slate_size}"
+            )
+        if self.shortlist is not None and self.shortlist <= 0:
+            raise ValueError(f"shortlist must be >= 1, got {self.shortlist}")
+        if self.deadline is not None and not self.deadline > 0:
+            raise ValueError(
+                f"deadline must be a positive seconds budget, got "
+                f"{self.deadline}"
+            )
+        s_nd, f_nd = jnp.ndim(self.scores), jnp.ndim(self.feats)
+        if s_nd not in (1, 2):
+            raise ValueError(
+                f"scores must be (M,) or a user batch (B, M), got "
+                f"ndim={s_nd}"
+            )
+        if f_nd != 2 and not (s_nd == 2 and f_nd == 3):
+            raise ValueError(
+                f"feats must be (M, D) (shared) or, with batched scores, "
+                f"per-user (B, M, D); got feats ndim={f_nd} with scores "
+                f"ndim={s_nd}"
+            )
+        if self.mask is not None:
+            m_nd = jnp.ndim(self.mask)
+            if m_nd != 1 and not (s_nd == 2 and m_nd == 2):
+                raise ValueError(
+                    f"mask must be (M,) (shared) or, with batched scores, "
+                    f"per-user (B, M); got mask ndim={m_nd} with scores "
+                    f"ndim={s_nd}"
+                )
+
+    @property
+    def batched(self) -> bool:
+        return jnp.ndim(self.scores) == 2
+
+    @property
+    def num_candidates(self) -> int:
+        return jnp.shape(self.scores)[-1]
+
+
+class Reranker:
+    """A DPP rerank serving session.
+
+    Holds one model-side :class:`DPPRerankConfig` and serves any number
+    of :class:`RerankRequest`\\ s through three verbs — ``rerank``
+    (whole slate, blocking), ``stream`` (chunk-emitting generator) and
+    ``submit`` (continuous-batching router handle).  The compiled
+    computations are keyed by the session config plus request *shapes*;
+    request-side knobs (k, shortlist, mask, deadline) never force a
+    recompile.
+    """
+
+    def __init__(self, cfg: DPPRerankConfig, router_config=None):
+        if not isinstance(cfg, DPPRerankConfig):
+            raise TypeError(
+                f"Reranker takes a DPPRerankConfig, got {type(cfg).__name__}"
+            )
+        self.cfg = cfg
+        self._router_config = router_config
+        self._router = None
+
+    # -- request-side resolution -------------------------------------------
+
+    def _cfg_for(self, req: RerankRequest) -> DPPRerankConfig:
+        """The effective config for one request: the session's
+        model-side knobs with the request's k / shortlist folded in."""
+        k = req.slate_size if req.slate_size is not None else self.cfg.slate_size
+        c = req.shortlist if req.shortlist is not None else self.cfg.shortlist
+        if (k, c) == (self.cfg.slate_size, self.cfg.shortlist):
+            return self.cfg
+        return dataclasses.replace(self.cfg, slate_size=k, shortlist=c)
+
+    @staticmethod
+    def _as_request(req, kwargs) -> RerankRequest:
+        if isinstance(req, RerankRequest):
+            if kwargs:
+                raise TypeError(
+                    "pass request knobs inside the RerankRequest, not as "
+                    f"keyword overrides: {sorted(kwargs)}"
+                )
+            return req
+        raise TypeError(
+            f"expected a RerankRequest, got {type(req).__name__}; build one "
+            f"with RerankRequest(scores=..., feats=..., ...)"
+        )
+
+    # -- whole-slate -------------------------------------------------------
+
+    def rerank(self, req: RerankRequest, **kwargs):
+        """Whole-slate rerank: ``(indices, d_hist)``, shapes ``(N,)``
+        single / ``(B, N)`` batched, global ids into the request's M
+        (-1 after an eps-stop).  Dispatch: ``cfg.mesh`` -> sharded;
+        batched scores -> the whole batch on the mesh, or a vmap of
+        the single-device path."""
+        req = self._as_request(req, kwargs)
+        cfg = self._cfg_for(req)
+        if cfg.mesh is not None:
+            from repro.serving.sharded_rerank import _sharded_kernel
+
+            return _sharded_rerank_impl(
+                req.scores, req.feats, cfg, req.mask, _sharded_kernel
+            )
+        if req.batched:
+            return _rerank_batch_impl(req.scores, req.feats, cfg, req.mask)
+        return _rerank_impl(req.scores, req.feats, cfg, req.mask)
+
+    # -- chunked streaming -------------------------------------------------
+
+    def stream(
+        self, req: RerankRequest, chunk_size: Optional[int] = None, **kwargs
+    ) -> Iterator[Tuple[jnp.ndarray, jnp.ndarray]]:
+        """Stream one request's slate as it is selected.
+
+        Returns a generator of ``(indices (c,) int32 global ids,
+        d_hist (c,))`` chunks whose concatenation equals
+        ``rerank(req)`` exactly (same shortlist, same greedy
+        sequence); the last chunk is short when ``chunk`` does not
+        divide the slate.  ``chunk_size`` overrides
+        ``cfg.chunk_size``.
+
+        Preparation — validation, the top-C shortlist, the resumable
+        greedy state, the kernel-operand padding — happens *here*, not
+        at the first ``next()``: the returned generator's resume path
+        costs O(chunk) host-side, nothing O(M).
+        """
+        req = self._as_request(req, kwargs)
+        cfg = self._cfg_for(req)
+        if req.batched:
+            raise ValueError(
+                "stream serves a single request (scores (M,)); batch "
+                "serving goes through rerank or the router"
+            )
+        from repro.core.streaming import (
+            greedy_chunk,
+            greedy_init,
+            resolve_chunk,
+            slot_pad_v,
+        )
+
+        spec = cfg.greedy_spec()
+        chunk = resolve_chunk(
+            spec, chunk_size if chunk_size is not None else cfg.chunk_size
+        )
+        if cfg.mesh is not None:
+            from repro.serving.sharded_rerank import _sharded_kernel
+
+            V, m_sel = _sharded_kernel(req.scores, req.feats, cfg, req.mask)
+            top_i = None
+        else:
+            V, m_sel, top_i = _shortlist_kernel(
+                req.scores, req.feats, cfg, req.mask
+            )
+        state = greedy_init(spec, V=V, mask=m_sel)
+        V = slot_pad_v(spec, V, state)
+
+        def emit():
+            done, st = 0, state
+            while done < cfg.slate_size:
+                c = min(chunk, cfg.slate_size - done)
+                st, sel, dh = greedy_chunk(spec, st, V=V, chunk_size=c)
+                if top_i is not None:
+                    sel = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
+                yield sel.astype(jnp.int32), dh
+                done += c
+
+        return emit()
+
+    # -- continuous batching -----------------------------------------------
+
+    @property
+    def router(self):
+        """The session's continuous-batching router (created lazily on
+        first use; see ``repro.serving.router``)."""
+        if self._router is None:
+            from repro.serving.router import RerankRouter, RouterConfig
+
+            self._router = RerankRouter(
+                self.cfg, self._router_config or RouterConfig()
+            )
+        return self._router
+
+    def submit(self, req: RerankRequest, **kwargs):
+        """Submit one request to the session's continuous-batching
+        router; returns a ``SlateHandle`` immediately.  The request
+        joins the shared micro-batch at the next free slot — call
+        ``handle.result()`` (or pump the router) to drive it."""
+        req = self._as_request(req, kwargs)
+        return self.router.submit(req)
+
+
+# ---------------------------------------------------------------------------
+# Implementation bodies (the legacy functions shim onto these through
+# Reranker; keeping them module-level keeps the jit caches shared)
+# ---------------------------------------------------------------------------
+
+
+def _rerank_impl(scores, feats, cfg, mask):
+    if jnp.ndim(scores) != 1:
+        raise ValueError(
+            f"rerank takes a single request (scores (M,)), got "
+            f"ndim={jnp.ndim(scores)}; use rerank_batch for user batches"
+        )
+    V, m_top, top_i = _shortlist_kernel(scores, feats, cfg, mask)
+    res = greedy_map(cfg.greedy_spec(), V=V, mask=m_top)
+    sel, dh = res.indices, res.d_hist
+    out = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
+    return out.astype(jnp.int32), dh
+
+
+def _rerank_batch_impl(scores, feats, cfg, mask):
+    if mask is not None and mask.ndim == 1:
+        mask = jnp.broadcast_to(mask, scores.shape)
+    f_ax = 0 if feats.ndim == 3 else None
+    if mask is None:  # keep the unmasked hot path free of mask plumbing
+        return jax.vmap(
+            lambda s, f: _rerank_impl(s, f, cfg, None), in_axes=(0, f_ax)
+        )(scores, feats)
+    return jax.vmap(
+        lambda s, f, m: _rerank_impl(s, f, cfg, m), in_axes=(0, f_ax, 0)
+    )(scores, feats, mask)
+
+
+def _sharded_rerank_impl(scores, feats, cfg, mask, sharded_kernel):
+    from repro.core.sharded import dpp_greedy_sharded
+
+    V, smask = sharded_kernel(scores, feats, cfg, mask)
+    res = dpp_greedy_sharded(
+        V,
+        cfg.slate_size,
+        mesh=cfg.mesh,
+        axis_name=cfg.axis_name,
+        window=cfg.window,
+        eps=cfg.eps,
+        mask=smask,
+        tile_m=cfg.tile_m,
+        interpret=cfg.interpret,
+    )
+    return res.indices.astype(jnp.int32), res.d_hist

@@ -41,23 +41,46 @@ All greedy variants are reached through ``repro.core.greedy_map``:
 ``GreedySpec``): a nonsensical slate/shortlist/window/eps raises a
 ``ValueError`` when the config is built, not as a shape or trace error
 deep inside the jitted serve step.
+
+**Deprecation.** The function-per-shape surface this module grew
+(``rerank`` / ``rerank_batch`` / ``rerank_stream``, plus the sharded
+twins in ``repro.serving.sharded_rerank``) is superseded by the
+session API in ``repro.serving.api`` — ``Reranker(cfg)`` with
+``.rerank`` / ``.stream`` / ``.submit`` dispatching on the config and
+the request shape.  The functions below survive one release as thin
+shims that emit a ``DeprecationWarning`` and delegate; new code (and
+the continuous-batching router, which is the new API's first client)
+should construct a ``Reranker``.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dispatch import GreedySpec, greedy_map
+from repro.core.dispatch import GreedySpec
 from repro.core.kernel_matrix import map_relevance
 
 
 @dataclasses.dataclass(frozen=True)
 class DPPRerankConfig:
-    slate_size: int = 50  # N
-    shortlist: int = 1000  # C (the paper's "few hundreds pre-selected")
+    """Model-side serving configuration.
+
+    These are the knobs that shape *compiled* computations — window,
+    eps, backend selection (use_kernel / mesh / tile_m), chunk size,
+    the relevance trade-off alpha.  The request-side knobs (slate
+    length k, shortlist width, candidate mask, deadline) moved to
+    ``repro.serving.api.RerankRequest``; the ``slate_size`` /
+    ``shortlist`` fields kept here act as *session defaults* for
+    requests that do not override them, so pre-split configs keep
+    working unchanged.
+    """
+
+    slate_size: int = 50  # N (session default; RerankRequest overrides)
+    shortlist: int = 1000  # C (session default; RerankRequest overrides)
     alpha: float = 4.0  # trade-off (paper eq. 21); 1.0 = pure diversity
     eps: float = 1e-3
     use_kernel: bool = False  # Pallas path (interpret on CPU)
@@ -120,36 +143,41 @@ class DPPRerankConfig:
         )
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.serving.{old} is deprecated and will be removed next "
+        f"release; use {new} (see repro.serving.api)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def rerank(
     scores: jnp.ndarray,
     feats: jnp.ndarray,
     cfg: DPPRerankConfig,
     mask: Optional[jnp.ndarray] = None,
 ):
-    """scores (M,), feats (M, D) l2-normalized rows -> slate (N,) global ids.
+    """Deprecated shim — use ``Reranker(cfg).rerank(RerankRequest(...))``.
 
-    Returns (indices (N,) int32 into the original M, d_hist (N,)).
-    ``mask`` (M,) bool marks selectable candidates — False entries
-    (already-seen / filtered items) are pushed out of the shortlist and
-    excluded from greedy selection.  With ``cfg.mesh`` set the candidate
-    axis is sharded (see ``repro.serving.sharded_rerank``).
+    scores (M,), feats (M, D) l2-normalized rows -> slate (N,) global
+    ids: (indices (N,) int32 into the original M, d_hist (N,)).
     """
-    if cfg.mesh is not None:
-        from repro.serving.sharded_rerank import sharded_rerank
+    _deprecated("rerank(scores, feats, cfg)", "Reranker(cfg).rerank(req)")
+    from repro.serving.api import _rerank_impl, _sharded_rerank_impl
 
-        # sharded_rerank also serves batches; rerank's contract stays
+    if cfg.mesh is not None:
+        from repro.serving.sharded_rerank import _sharded_kernel
+
+        # sharded serving also takes batches; rerank's contract stays
         # single-request (batches go through rerank_batch)
         if scores.ndim != 1:
             raise ValueError(
                 f"rerank takes a single request (scores (M,)), got "
                 f"ndim={scores.ndim}; use rerank_batch for user batches"
             )
-        return sharded_rerank(scores, feats, cfg, mask=mask)
-    V, m_top, top_i = _shortlist_kernel(scores, feats, cfg, mask)
-    res = greedy_map(cfg.greedy_spec(), V=V, mask=m_top)
-    sel, dh = res.indices, res.d_hist
-    out = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
-    return out.astype(jnp.int32), dh
+        return _sharded_rerank_impl(scores, feats, cfg, mask, _sharded_kernel)
+    return _rerank_impl(scores, feats, cfg, mask)
 
 
 def _shortlist_kernel(scores, feats, cfg, mask):
@@ -179,42 +207,25 @@ def rerank_stream(
     mask: Optional[jnp.ndarray] = None,
     chunk_size: Optional[int] = None,
 ):
-    """Stream one request's slate as it is selected, chunk by chunk.
+    """Deprecated shim — use ``Reranker(cfg).stream(RerankRequest(...))``.
 
     Generator over ``ceil(slate_size / chunk)`` chunks, each a
-    ``(indices (c,) int32 global ids, d_hist (c,))`` pair (the last
-    chunk is short when ``chunk`` does not divide ``slate_size``; slots
-    after an eps-stop hold -1 / 0).  ``chunk_size`` overrides
-    ``cfg.chunk_size``; one of them must be set.  Concatenating the
-    chunks reproduces ``rerank(scores, feats, cfg, mask)`` exactly —
-    same shortlist, same kernel, same greedy sequence — on every
-    backend; the resumable greedy state (and, with ``cfg.mesh``, its
-    device shards) persists between chunks, so time-to-first-chunk is
-    the cost of ``chunk`` greedy steps, not of the whole slate.
+    ``(indices (c,) int32 global ids, d_hist (c,))`` pair; chunks
+    concatenate exactly to ``rerank``'s whole-slate result.
+    ``chunk_size`` overrides ``cfg.chunk_size``; one of them must be
+    set.  (The session ``stream`` additionally hoists validation, the
+    shortlist and the state build out of the generator — O(chunk)
+    per resume — which this shim inherits by delegating.)
     """
-    if scores.ndim != 1:
-        raise ValueError(
-            f"rerank_stream takes a single request (scores (M,)), got "
-            f"ndim={scores.ndim}"
-        )
-    if cfg.mesh is not None:
-        from repro.serving.sharded_rerank import sharded_rerank_stream
+    _deprecated(
+        "rerank_stream(scores, feats, cfg)", "Reranker(cfg).stream(req)"
+    )
+    from repro.serving.api import Reranker, RerankRequest
 
-        yield from sharded_rerank_stream(
-            scores, feats, cfg, mask=mask, chunk_size=chunk_size
-        )
-        return
-    from repro.core.dispatch import greedy_map_chunks
-    from repro.core.streaming import resolve_chunk
-
-    spec = cfg.greedy_spec()
-    chunk = resolve_chunk(spec, chunk_size if chunk_size is not None
-                          else cfg.chunk_size)
-    V, m_top, top_i = _shortlist_kernel(scores, feats, cfg, mask)
-    for res in greedy_map_chunks(spec, V=V, mask=m_top, chunk_size=chunk):
-        sel = res.indices
-        out = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
-        yield out.astype(jnp.int32), res.d_hist
+    return Reranker(cfg).stream(
+        RerankRequest(scores=scores, feats=feats, mask=mask),
+        chunk_size=chunk_size,
+    )
 
 
 def rerank_batch(
@@ -223,35 +234,23 @@ def rerank_batch(
     cfg: DPPRerankConfig,
     mask: Optional[jnp.ndarray] = None,
 ):
-    """scores (B, M), feats (B, M, D) or shared (M, D), mask (B, M),
-    shared (M,), or None.
+    """Deprecated shim — use ``Reranker(cfg).rerank(RerankRequest(...))``
+    with batched ``scores (B, M)``.
 
-    Returns (slates (B, N) int32 global ids, d_hist (B, N)).  With
-    ``cfg.mesh`` set the whole request batch shares the mesh: the
-    candidate axis stays sharded, the shortlist is one batched sharded
-    top-k, and the greedy per-step collectives batch over B (see
-    ``repro.serving.sharded_rerank``) — slates are identical index for
-    index to a ``vmap`` of the single-device ``rerank`` on the same
-    inputs.  Without a mesh this is that vmap.
+    scores (B, M), feats (B, M, D) or shared (M, D), mask (B, M),
+    shared (M,), or None -> (slates (B, N) int32 global ids,
+    d_hist (B, N)).
     """
-    if cfg.mesh is not None:
-        from repro.serving.sharded_rerank import sharded_rerank
-
-        # sharded_rerank also serves single requests; rerank_batch's
-        # contract stays batched (single requests go through rerank)
-        if scores.ndim != 2:
-            raise ValueError(
-                f"rerank_batch takes a user batch (scores (B, M)), got "
-                f"ndim={scores.ndim}; use rerank for a single request"
-            )
-        return sharded_rerank(scores, feats, cfg, mask=mask)
-    if mask is not None and mask.ndim == 1:
-        mask = jnp.broadcast_to(mask, scores.shape)
-    f_ax = 0 if feats.ndim == 3 else None
-    if mask is None:  # keep the unmasked hot path free of mask plumbing
-        return jax.vmap(lambda s, f: rerank(s, f, cfg), in_axes=(0, f_ax))(
-            scores, feats
+    _deprecated(
+        "rerank_batch(scores, feats, cfg)", "Reranker(cfg).rerank(req)"
+    )
+    if scores.ndim != 2:
+        raise ValueError(
+            f"rerank_batch takes a user batch (scores (B, M)), got "
+            f"ndim={scores.ndim}; use rerank for a single request"
         )
-    return jax.vmap(
-        lambda s, f, m: rerank(s, f, cfg, mask=m), in_axes=(0, f_ax, 0)
-    )(scores, feats, mask)
+    from repro.serving.api import Reranker, RerankRequest
+
+    return Reranker(cfg).rerank(
+        RerankRequest(scores=scores, feats=feats, mask=mask)
+    )

@@ -1,0 +1,449 @@
+"""Continuous-batching rerank router — heterogeneous live requests on
+one slot-batched greedy state.
+
+The whole-slate and streaming serving paths run one compiled program
+per request (or per uniform batch that must arrive together).  A live
+reranker sees neither shape: requests with different candidate counts,
+slate lengths and masks arrive at different times, and a slate that
+eps-stops after 7 picks should hand its device lane to the next request
+immediately, not idle until its neighbours finish.  This router serves
+that shape the way LLM servers batch token generation continuously:
+
+* a fixed micro-batch of ``slots`` lanes advances ``chunk_size`` greedy
+  steps per cycle through **one** batched chunk call
+  (``repro.core.streaming.greedy_chunk_slots``) — the per-slot step
+  counter ``t (S,)`` lets every lane sit at its own depth;
+* requests are padded into a common bucket: the candidate axis to
+  ``max_candidates`` columns (padding masked to -inf, which argmax can
+  never pick, so slates are index-for-index those of a per-request
+  ``rerank``) and the slot Cholesky capacity to ``max_slate`` rows —
+  per-request k, mask and progress live in data and host-side loop
+  bounds, so admission never recompiles;
+* completed, eps-stopped and deadline-expired lanes are evicted
+  (``state_evict``) and refilled from a bounded FIFO admission queue
+  (``state_splice``) between cycles;
+* the pump is **double-buffered on JAX async dispatch**: each cycle
+  syncs only the previous chunk's tiny ``stopped`` flags, decides
+  evictions/admissions, *launches the next chunk* (returns immediately),
+  and only then materializes the previous chunk's selections for
+  delivery — host-side trimming and id-mapping overlap with the device
+  computing the next chunk.
+
+The pump is synchronous and caller-driven: ``submit`` enqueues and
+returns a :class:`SlateHandle`; ``pump()`` advances the world one
+cycle; ``handle.result()`` pumps until that request finishes.  Requests
+past ``max_queue`` are refused with :class:`RouterQueueFull`
+(backpressure), admission is strictly FIFO (no starvation), and a
+request whose ``deadline`` lapses is evicted with its partial slate and
+``timed_out=True``.  :class:`RouterStats` exposes the serving counters
+and gauges (queue depth, slot occupancy, batch fill ratio, TTFC);
+``RouterConfig.metrics_hook`` receives a snapshot after every pump.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.streaming import (
+    greedy_chunk_slots,
+    greedy_slot_state,
+    greedy_slots_init,
+    slot_pad_v,
+    state_evict,
+    state_splice,
+)
+from repro.serving.reranker import DPPRerankConfig, _shortlist_kernel
+
+
+class RouterQueueFull(RuntimeError):
+    """The admission queue is at ``max_queue`` — resubmit after pumping."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Router shape: the micro-batch geometry and admission policy.
+
+    ``max_slate`` is the slot capacity (every lane shares one Cholesky
+    geometry; a request's own k only bounds how much of it is consumed)
+    and ``max_candidates`` the padded candidate bucket each request's
+    shortlist lands in — both default to the session config's
+    ``slate_size`` / ``shortlist``.
+    """
+
+    slots: int = 4
+    max_queue: int = 32
+    chunk_size: int = 8
+    max_slate: Optional[int] = None  # slot capacity; None -> cfg.slate_size
+    max_candidates: Optional[int] = None  # bucket width; None -> cfg.shortlist
+    metrics_hook: Optional[Callable[["RouterStats"], None]] = None
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.chunk_size < 1:
+            raise ValueError(
+                f"chunk_size must be >= 1, got {self.chunk_size}"
+            )
+        if self.max_slate is not None and self.max_slate < 1:
+            raise ValueError(f"max_slate must be >= 1, got {self.max_slate}")
+        if self.max_candidates is not None and self.max_candidates < 1:
+            raise ValueError(
+                f"max_candidates must be >= 1, got {self.max_candidates}"
+            )
+
+
+@dataclasses.dataclass
+class RouterStats:
+    """Counters (monotonic) and gauges (last pump) for the router."""
+
+    submitted: int = 0
+    admitted: int = 0
+    completed: int = 0
+    eps_stopped: int = 0
+    timed_out: int = 0
+    rejected: int = 0
+    chunks_launched: int = 0
+    lane_steps_active: int = 0  # occupied-lane steps launched
+    lane_steps_total: int = 0  # all-lane steps launched (active + parked)
+    queue_depth: int = 0  # gauge
+    slot_occupancy: int = 0  # gauge
+    ttfc_sum: float = 0.0
+    ttfc_count: int = 0
+
+    @property
+    def fill_ratio(self) -> float:
+        """Occupied fraction of launched lane-steps — the continuous-
+        batching payoff metric (1.0 = no lane ever idles)."""
+        if self.lane_steps_total == 0:
+            return 0.0
+        return self.lane_steps_active / self.lane_steps_total
+
+    @property
+    def mean_ttfc(self) -> float:
+        """Mean seconds from submit to the first delivered chunk."""
+        if self.ttfc_count == 0:
+            return 0.0
+        return self.ttfc_sum / self.ttfc_count
+
+    def snapshot(self) -> "RouterStats":
+        return dataclasses.replace(self)
+
+
+class SlateHandle:
+    """One submitted request's future slate.
+
+    ``result()`` pumps the owning router until this request finishes and
+    returns ``(indices, d_hist)`` — global ids into the request's own
+    candidate axis, length k with -1/0 fill past an eps-stop, or the
+    shorter partial slate with ``timed_out=True`` after a deadline
+    eviction.  ``ttfc`` is the seconds from submit to the first chunk.
+    """
+
+    def __init__(self, router: "RerankRouter", rid, k: int):
+        self.rid = rid
+        self.timed_out = False
+        self.ttfc: Optional[float] = None
+        self._router = router
+        self._k = k
+        self._done = False
+        self._idx: List[np.ndarray] = []
+        self._dh: List[np.ndarray] = []
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    @property
+    def delivered(self) -> int:
+        return sum(len(c) for c in self._idx)
+
+    def result(self) -> Tuple[np.ndarray, np.ndarray]:
+        while not self._done:
+            self._router.pump()
+        return self.slate()
+
+    def slate(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The chunks delivered so far (the full slate once ``done``)."""
+        idx = (
+            np.concatenate(self._idx) if self._idx
+            else np.zeros((0,), np.int32)
+        )
+        dh = (
+            np.concatenate(self._dh) if self._dh
+            else np.zeros((0,), np.float32)
+        )
+        return idx.astype(np.int32), dh.astype(np.float32)
+
+    # router-side delivery ---------------------------------------------------
+
+    def _deliver(self, idx: np.ndarray, dh: np.ndarray, now: float,
+                 submit_t: float):
+        if self.ttfc is None:
+            self.ttfc = now - submit_t
+        self._idx.append(idx)
+        self._dh.append(dh)
+
+    def _finish(self, timed_out: bool):
+        if not timed_out:
+            # the whole-slate contract: length k, -1/0 fill after a stop
+            short = self._k - self.delivered
+            if short > 0:
+                self._idx.append(np.full((short,), -1, np.int32))
+                self._dh.append(np.zeros((short,), np.float32))
+        self.timed_out = timed_out
+        self._done = True
+
+
+class _Live:
+    """Router-internal per-request record (queued or in a slot)."""
+
+    __slots__ = (
+        "req", "handle", "k", "top_i", "submit_t", "deadline_at", "count",
+    )
+
+    def __init__(self, req, handle, k, submit_t, deadline_at):
+        self.req = req
+        self.handle = handle
+        self.k = k
+        self.top_i: Optional[np.ndarray] = None  # set at admission
+        self.submit_t = submit_t
+        self.deadline_at = deadline_at
+        self.count = 0  # selections delivered so far
+
+
+class RerankRouter:
+    """Continuous-batching executor over one ``DPPRerankConfig`` session.
+
+    See the module docstring for the serving model.  Construction is
+    cheap; the slot-batched device state is allocated lazily at the
+    first admission (when the feature dimension is known).
+    """
+
+    def __init__(self, cfg: DPPRerankConfig,
+                 router_config: Optional[RouterConfig] = None):
+        self.cfg = cfg
+        self.rcfg = router_config or RouterConfig()
+        self.capacity = (
+            self.rcfg.max_slate if self.rcfg.max_slate is not None
+            else cfg.slate_size
+        )
+        self.bucket = (
+            self.rcfg.max_candidates if self.rcfg.max_candidates is not None
+            else cfg.shortlist
+        )
+        self.chunk = self.rcfg.chunk_size
+        # one spec for every lane: k is the slot capacity
+        self.spec = dataclasses.replace(
+            cfg, slate_size=self.capacity
+        ).greedy_spec()
+        self.stats = RouterStats()
+        self._queue: Deque[_Live] = deque()
+        self._active: Dict[int, _Live] = {}
+        self._free: List[int] = list(range(self.rcfg.slots))
+        self._state = None  # slot-batched GreedyState (lazy)
+        self._V = None  # (S, D*, M*) stacked kernel operand (lazy)
+        self._D: Optional[int] = None  # session feature dim (first submit)
+        self._inflight = None  # (state, sel, dh) of the launched chunk
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req) -> SlateHandle:
+        """Enqueue one single-user :class:`RerankRequest`; returns its
+        handle immediately.  Raises :class:`RouterQueueFull` past
+        ``max_queue`` (backpressure) and ``ValueError`` for requests the
+        router's bucket can never hold — both before enqueueing, so a
+        refused request costs nothing."""
+        if req.batched:
+            raise ValueError(
+                "the router serves single requests (scores (M,)); submit "
+                "each user separately — they share the micro-batch"
+            )
+        k = req.slate_size if req.slate_size is not None else self.cfg.slate_size
+        if k > self.capacity:
+            raise ValueError(
+                f"slate_size {k} exceeds the router's slot capacity "
+                f"{self.capacity} (RouterConfig.max_slate)"
+            )
+        shortlist = (
+            req.shortlist if req.shortlist is not None else self.cfg.shortlist
+        )
+        width = (
+            req.num_candidates if self.cfg.mesh is not None  # sharded: full M
+            else min(shortlist, req.num_candidates)
+        )
+        if width > self.bucket:
+            raise ValueError(
+                f"request needs {width} candidate columns, over the "
+                f"router's bucket {self.bucket} (RouterConfig.max_candidates)"
+            )
+        D = np.shape(req.feats)[-1]
+        if self._D is None:
+            self._D = D
+        elif D != self._D:
+            raise ValueError(
+                f"feature dim {D} != the session's {self._D} — one router "
+                f"serves one model"
+            )
+        if len(self._queue) >= self.rcfg.max_queue:
+            self.stats.rejected += 1
+            raise RouterQueueFull(
+                f"admission queue full ({self.rcfg.max_queue}); pump() "
+                f"or consume handles before resubmitting"
+            )
+        now = time.monotonic()
+        handle = SlateHandle(self, req.rid, k)
+        live = _Live(
+            req, handle, k, now,
+            None if req.deadline is None else now + req.deadline,
+        )
+        self._queue.append(live)
+        self.stats.submitted += 1
+        self.stats.queue_depth = len(self._queue)
+        return handle
+
+    # -- request preparation -------------------------------------------------
+
+    def _cfg_for(self, req) -> DPPRerankConfig:
+        c = req.shortlist if req.shortlist is not None else self.cfg.shortlist
+        if c == self.cfg.shortlist:
+            return self.cfg
+        return dataclasses.replace(self.cfg, shortlist=c)
+
+    def _prep(self, live: _Live):
+        """Host-side admission prep: shortlist, bucket padding, the
+        single-request slot state.  Returns ``(single_state, V_lane)``."""
+        req, cfg = live.req, self._cfg_for(live.req)
+        if self.cfg.mesh is not None:
+            from repro.serving.sharded_rerank import _sharded_kernel
+
+            V, m = _sharded_kernel(req.scores, req.feats, cfg, req.mask)
+            live.top_i = None  # sharded ids are already global
+        else:
+            V, m, top_i = _shortlist_kernel(req.scores, req.feats, cfg,
+                                            req.mask)
+            live.top_i = np.asarray(top_i)
+        width = V.shape[-1]
+        if m is None:
+            m = jnp.ones((width,), bool)
+        if width < self.bucket:
+            pad = self.bucket - width
+            V = jnp.pad(V, ((0, 0), (0, pad)))
+            m = jnp.pad(m, (0, pad))  # padding is never selectable
+        single = greedy_slot_state(self.spec, V, mask=m)
+        return single, slot_pad_v(self.spec, V, single)
+
+    def _admit(self, now: float):
+        """FIFO admission into free slots; expired queued requests are
+        finished (empty partial, timed_out) without ever occupying one."""
+        while self._queue and self._free:
+            live = self._queue.popleft()
+            if live.deadline_at is not None and now > live.deadline_at:
+                live.handle._finish(timed_out=True)
+                self.stats.timed_out += 1
+                continue
+            if self._state is None:
+                self._state, self._V = greedy_slots_init(
+                    self.spec, self.rcfg.slots, self._D, self.bucket
+                )
+            slot = self._free.pop()
+            single, V_lane = self._prep(live)
+            self._state = state_splice(self._state, single, slot)
+            self._V = self._V.at[slot].set(V_lane)
+            self._active[slot] = live
+            self.stats.admitted += 1
+
+    # -- the pump ------------------------------------------------------------
+
+    def _launch(self):
+        if not self._active:
+            return None
+        self.stats.chunks_launched += 1
+        self.stats.lane_steps_active += len(self._active) * self.chunk
+        self.stats.lane_steps_total += self.rcfg.slots * self.chunk
+        return greedy_chunk_slots(self.spec, self._state, self._V, self.chunk)
+
+    def _evict(self, slot: int):
+        self._state = state_evict(self._state, slot)
+        self._V = self._V.at[slot].set(0.0)
+        del self._active[slot]
+        self._free.append(slot)
+
+    def pump(self):
+        """One router cycle.
+
+        Sync the previous chunk's stopped flags -> evict finished /
+        eps-stopped / expired lanes -> admit from the queue -> launch
+        the next chunk (async) -> materialize and deliver the previous
+        chunk's selections while the device computes the next one.
+        """
+        now = time.monotonic()
+        if self._inflight is not None:
+            st, sel, dh = self._inflight
+            # the one device sync of the cycle: S bools
+            stopped = np.asarray(st.stopped)
+            self._state = st
+            deliveries = []
+            for slot, live in sorted(self._active.items()):
+                consume = min(self.chunk, live.k - live.count)
+                lane_stopped = bool(stopped[slot])
+                expired = (
+                    live.deadline_at is not None and now > live.deadline_at
+                )
+                complete = live.count + consume >= live.k
+                deliveries.append(
+                    (slot, live, consume, lane_stopped, expired, complete)
+                )
+                if lane_stopped or expired or complete:
+                    self._evict(slot)
+            self._admit(now)
+            nxt = self._launch()  # async dispatch: device starts chunk N+1
+            # ... while the host unpacks chunk N
+            sel_np, dh_np = np.asarray(sel), np.asarray(dh)
+            for slot, live, consume, lane_stopped, expired, complete in (
+                    deliveries):
+                idx = sel_np[slot, :consume].astype(np.int32)
+                if live.top_i is not None:
+                    idx = np.where(idx >= 0, live.top_i[np.clip(idx, 0, None)],
+                                   -1).astype(np.int32)
+                first = live.handle.ttfc is None
+                live.handle._deliver(
+                    idx, dh_np[slot, :consume].astype(np.float32),
+                    time.monotonic(), live.submit_t,
+                )
+                if first and live.handle.ttfc is not None:
+                    self.stats.ttfc_sum += live.handle.ttfc
+                    self.stats.ttfc_count += 1
+                live.count += consume
+                if lane_stopped or complete:
+                    live.handle._finish(timed_out=False)
+                    self.stats.completed += 1
+                    if lane_stopped and not complete:
+                        self.stats.eps_stopped += 1
+                elif expired:
+                    live.handle._finish(timed_out=True)
+                    self.stats.timed_out += 1
+            self._inflight = nxt
+        else:
+            self._admit(now)
+            self._inflight = self._launch()
+        self.stats.queue_depth = len(self._queue)
+        self.stats.slot_occupancy = len(self._active)
+        if self.rcfg.metrics_hook is not None:
+            self.rcfg.metrics_hook(self.stats.snapshot())
+
+    def drain(self, max_pumps: int = 100_000):
+        """Pump until every queued and active request has finished."""
+        pumps = 0
+        while self._queue or self._active or self._inflight is not None:
+            self.pump()
+            pumps += 1
+            if pumps > max_pumps:
+                raise RuntimeError("router failed to drain (livelock?)")

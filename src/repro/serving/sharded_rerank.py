@@ -43,7 +43,8 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.core.kernel_matrix import map_relevance
-from repro.core.sharded import dpp_greedy_sharded, sharded_topk
+from repro.core.sharded import sharded_topk
+from repro.serving.reranker import _deprecated
 
 
 def sharded_rerank(
@@ -52,27 +53,21 @@ def sharded_rerank(
     cfg,
     mask: Optional[jnp.ndarray] = None,
 ):
-    """scores (M,) or (B, M) -> (slate (N,)/(B, N) int32 global ids, d_hist).
+    """Deprecated shim — ``Reranker(cfg).rerank(RerankRequest(...))``
+    with ``cfg.mesh`` set dispatches here automatically.
 
-    ``cfg`` is a ``DPPRerankConfig`` with ``mesh`` set.  ``feats`` is
-    (M, D) — shared across the batch when scores are (B, M) — or
-    per-user (B, M, D).  ``mask`` is (M,), (B, M), or a shared (M,)
-    filter broadcast over the batch; False entries are excluded from
-    both the shortlist and the slate.
+    scores (M,) or (B, M) -> (slate (N,)/(B, N) int32 global ids,
+    d_hist).  ``cfg`` is a ``DPPRerankConfig`` with ``mesh`` set;
+    ``feats`` is (M, D) — shared across the batch when scores are
+    (B, M) — or per-user (B, M, D); ``mask`` is (M,), (B, M), or a
+    shared (M,) filter broadcast over the batch.
     """
-    V, smask = _sharded_kernel(scores, feats, cfg, mask)
-    res = dpp_greedy_sharded(
-        V,
-        cfg.slate_size,
-        mesh=cfg.mesh,
-        axis_name=cfg.axis_name,
-        window=cfg.window,
-        eps=cfg.eps,
-        mask=smask,
-        tile_m=cfg.tile_m,
-        interpret=cfg.interpret,
+    _deprecated(
+        "sharded_rerank(scores, feats, cfg)", "Reranker(cfg).rerank(req)"
     )
-    return res.indices.astype(jnp.int32), res.d_hist
+    from repro.serving.api import _sharded_rerank_impl
+
+    return _sharded_rerank_impl(scores, feats, cfg, mask, _sharded_kernel)
 
 
 def _sharded_kernel(scores, feats, cfg, mask):
@@ -137,39 +132,20 @@ def sharded_rerank_stream(
     mask: Optional[jnp.ndarray] = None,
     chunk_size: Optional[int] = None,
 ):
-    """Stream a sharded rerank's slate chunk by chunk.
+    """Deprecated shim — ``Reranker(cfg).stream(RerankRequest(...))``
+    with ``cfg.mesh`` set dispatches to the sharded stream path.
 
     Generator over ``(indices (c,) int32 global ids, d_hist (c,))``
-    pairs whose concatenation reproduces ``sharded_rerank`` exactly.
-    Between chunks the greedy state stays sharded and device-resident
-    (the windowed ring ``C (w, M/P)`` per device supports unbounded
-    slates); each chunk adds one host round — the (c,)-sized results —
-    on top of the loop's per-step argmax collectives, so the first
-    items of a long feed ship after ``chunk`` steps instead of
-    ``slate_size``.
+    pairs whose concatenation reproduces ``sharded_rerank`` exactly;
+    between chunks the greedy state stays sharded and device-resident.
     """
-    from repro.core.sharded import (
-        _stream_pad,
-        dpp_greedy_sharded_stream_chunk,
-        dpp_greedy_sharded_stream_init,
+    _deprecated(
+        "sharded_rerank_stream(scores, feats, cfg)",
+        "Reranker(cfg).stream(req)",
     )
-    from repro.core.streaming import resolve_chunk
+    from repro.serving.api import Reranker, RerankRequest
 
-    chunk = resolve_chunk(cfg.greedy_spec(), chunk_size if chunk_size
-                          is not None else cfg.chunk_size)
-    V, smask = _sharded_kernel(scores, feats, cfg, mask)
-    state = dpp_greedy_sharded_stream_init(
-        V, cfg.slate_size, mesh=cfg.mesh, axis_name=cfg.axis_name,
-        window=cfg.window, mask=smask, tile_m=cfg.tile_m,
+    return Reranker(cfg).stream(
+        RerankRequest(scores=scores, feats=feats, mask=mask),
+        chunk_size=chunk_size,
     )
-    # pad once up front; the per-chunk calls then move no O(D M) data
-    V = _stream_pad(V, state.d2.shape[-1])
-    done = 0
-    while done < cfg.slate_size:
-        c = min(chunk, cfg.slate_size - done)
-        state, sel, dh = dpp_greedy_sharded_stream_chunk(
-            V, state, c, mesh=cfg.mesh, axis_name=cfg.axis_name,
-            eps=cfg.eps, tile_m=cfg.tile_m, interpret=cfg.interpret,
-        )
-        yield sel.astype(jnp.int32), dh
-        done += c

@@ -1,0 +1,223 @@
+"""The unified serving API (repro.serving.api): Reranker / RerankRequest
+dispatch, construction-time request validation, the legacy-shim
+deprecation contract, and the streaming prep hoist.
+
+The legacy functions (rerank / rerank_batch / rerank_stream /
+sharded_rerank / sharded_rerank_stream) survive one release as
+DeprecationWarning shims; every shim is asserted to (a) warn and
+(b) return bitwise the session API's result.  The older suites keep
+calling the shims directly — their continued passing is the shims'
+behavioural coverage.
+"""
+import warnings
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.distributed.context import make_mesh_compat
+from repro.serving import (
+    DPPRerankConfig,
+    Reranker,
+    RerankRequest,
+    rerank,
+    rerank_batch,
+    rerank_stream,
+    sharded_rerank,
+    sharded_rerank_stream,
+)
+
+
+def _problem(M, D=8, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    shape = (M, D) if batch is None else (batch, M, D)
+    f = rng.normal(size=shape).astype(np.float32)
+    f /= np.maximum(np.linalg.norm(f, axis=-1, keepdims=True), 1e-12)
+    s = rng.uniform(0.1, 1.0, size=shape[:-1]).astype(np.float32)
+    return jnp.asarray(s), jnp.asarray(f)
+
+
+CFG = DPPRerankConfig(slate_size=8, shortlist=32, alpha=3.0, chunk_size=3)
+
+
+# ---------------------------------------------------------------------------
+# RerankRequest: construction-time validation
+# ---------------------------------------------------------------------------
+
+
+def test_request_validates_at_construction():
+    s, f = _problem(40)
+    for bad in (
+        dict(slate_size=0), dict(slate_size=-2), dict(shortlist=0),
+        dict(deadline=0.0), dict(deadline=-1.0),
+    ):
+        with pytest.raises(ValueError):
+            RerankRequest(scores=s, feats=f, **bad)
+    with pytest.raises(ValueError, match="scores"):
+        RerankRequest(scores=s[None, None], feats=f)
+    with pytest.raises(ValueError, match="feats"):
+        RerankRequest(scores=s, feats=f[None])  # (1, M, D) needs (B, M)
+    with pytest.raises(ValueError, match="mask"):
+        RerankRequest(scores=s, feats=f, mask=jnp.ones((2, 40), bool))
+    req = RerankRequest(scores=s, feats=f, slate_size=5, rid="x")
+    assert not req.batched and req.num_candidates == 40
+
+
+def test_request_batched_shapes():
+    s, f = _problem(30, batch=3)
+    assert RerankRequest(scores=s, feats=f).batched
+    # shared feats with a batch is fine
+    RerankRequest(scores=s, feats=f[0])
+    RerankRequest(scores=s, feats=f, mask=jnp.ones((3, 30), bool))
+    RerankRequest(scores=s, feats=f[0], mask=jnp.ones((30,), bool))
+
+
+def test_reranker_rejects_non_config():
+    with pytest.raises(TypeError, match="DPPRerankConfig"):
+        Reranker({"slate_size": 4})
+    with pytest.raises(TypeError, match="RerankRequest"):
+        Reranker(CFG).rerank(np.zeros(4))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch parity: the session API serves what the old functions served
+# ---------------------------------------------------------------------------
+
+
+def test_rerank_single_matches_legacy():
+    s, f = _problem(60, seed=1)
+    m = jnp.asarray(np.arange(60) % 4 != 0)
+    rr = Reranker(CFG)
+    for mask in (None, m):
+        new = rr.rerank(RerankRequest(scores=s, feats=f, mask=mask))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            old = rerank(s, f, CFG, mask=mask)
+        np.testing.assert_array_equal(np.asarray(new[0]), np.asarray(old[0]))
+        np.testing.assert_array_equal(np.asarray(new[1]), np.asarray(old[1]))
+
+
+def test_rerank_batched_dispatch_matches_legacy():
+    s, f = _problem(50, seed=2, batch=3)
+    rr = Reranker(CFG)
+    new = rr.rerank(RerankRequest(scores=s, feats=f))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = rerank_batch(s, f, CFG)
+    np.testing.assert_array_equal(np.asarray(new[0]), np.asarray(old[0]))
+    assert np.asarray(new[0]).shape == (3, CFG.slate_size)
+
+
+def test_request_side_overrides():
+    """Per-request k / shortlist fold into the session config without
+    touching the session's own defaults."""
+    s, f = _problem(60, seed=3)
+    rr = Reranker(CFG)
+    out, _ = rr.rerank(RerankRequest(scores=s, feats=f, slate_size=4))
+    assert np.asarray(out).shape == (4,)
+    exp, _ = rr.rerank(
+        RerankRequest(scores=s, feats=f, slate_size=4, shortlist=16)
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        import dataclasses
+
+        old, _ = rerank(
+            s, f, dataclasses.replace(CFG, slate_size=4, shortlist=16)
+        )
+    np.testing.assert_array_equal(np.asarray(exp), np.asarray(old))
+    assert rr.cfg.slate_size == 8 and rr.cfg.shortlist == 32
+
+
+def test_stream_concatenates_to_rerank():
+    s, f = _problem(60, seed=4)
+    rr = Reranker(CFG)
+    req = RerankRequest(scores=s, feats=f)
+    whole = np.asarray(rr.rerank(req)[0])
+    chunks = [np.asarray(i) for i, _ in rr.stream(req)]
+    assert all(len(c) <= CFG.chunk_size for c in chunks)
+    np.testing.assert_array_equal(np.concatenate(chunks), whole)
+
+
+def test_stream_rejects_batched_eagerly():
+    s, f = _problem(30, seed=5, batch=2)
+    # a plain generator would only raise at the first next(); the session
+    # API raises at the call
+    with pytest.raises(ValueError, match="single request"):
+        Reranker(CFG).stream(RerankRequest(scores=s, feats=f))
+
+
+def test_stream_prep_is_hoisted(monkeypatch):
+    """The O(M) prep — validation, shortlist, state build — runs once at
+    the stream() call; generator resumes never re-shortlist."""
+    import repro.serving.api as api
+
+    calls = {"n": 0}
+    real = api._shortlist_kernel
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(api, "_shortlist_kernel", counting)
+    s, f = _problem(60, seed=6)
+    gen = Reranker(CFG).stream(RerankRequest(scores=s, feats=f))
+    assert calls["n"] == 1  # prep happened at the call, before any next()
+    n_chunks = sum(1 for _ in gen)
+    assert n_chunks == -(-CFG.slate_size // CFG.chunk_size)
+    assert calls["n"] == 1  # and never again on resume
+
+
+def test_sharded_dispatch_one_device():
+    mesh = make_mesh_compat((1,), ("data",))
+    cfg = DPPRerankConfig(slate_size=6, shortlist=24, alpha=3.0, mesh=mesh,
+                          chunk_size=3)
+    s, f = _problem(48, seed=7)
+    rr = Reranker(cfg)
+    new = rr.rerank(RerankRequest(scores=s, feats=f))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = sharded_rerank(s, f, cfg)
+    np.testing.assert_array_equal(np.asarray(new[0]), np.asarray(old[0]))
+    streamed = np.concatenate(
+        [np.asarray(i) for i, _ in rr.stream(RerankRequest(scores=s, feats=f))]
+    )
+    np.testing.assert_array_equal(streamed, np.asarray(new[0]))
+
+
+# ---------------------------------------------------------------------------
+# The deprecation contract (ISSUE: shims covered by filterwarnings test)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.filterwarnings("error::DeprecationWarning")
+def test_every_legacy_entry_point_warns():
+    s, f = _problem(40, seed=8)
+    sb, fb = _problem(40, seed=8, batch=2)
+    mesh = make_mesh_compat((1,), ("data",))
+    mcfg = DPPRerankConfig(slate_size=4, shortlist=16, mesh=mesh,
+                           chunk_size=2)
+    with pytest.raises(DeprecationWarning):
+        rerank(s, f, CFG)
+    with pytest.raises(DeprecationWarning):
+        rerank_batch(sb, fb, CFG)
+    with pytest.raises(DeprecationWarning):
+        rerank_stream(s, f, CFG)
+    with pytest.raises(DeprecationWarning):
+        sharded_rerank(s, f, mcfg)
+    with pytest.raises(DeprecationWarning):
+        sharded_rerank_stream(s, f, mcfg)
+
+
+def test_legacy_shims_still_serve():
+    """The shims delegate, not just warn: results match the session API
+    and the stream shim still yields chunks."""
+    s, f = _problem(40, seed=9)
+    rr = Reranker(CFG)
+    exp = np.asarray(rr.rerank(RerankRequest(scores=s, feats=f))[0])
+    with pytest.warns(DeprecationWarning):
+        got = np.asarray(rerank(s, f, CFG)[0])
+    np.testing.assert_array_equal(got, exp)
+    with pytest.warns(DeprecationWarning):
+        chunks = [np.asarray(i) for i, _ in rerank_stream(s, f, CFG)]
+    np.testing.assert_array_equal(np.concatenate(chunks), exp)
