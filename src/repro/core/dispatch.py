@@ -68,6 +68,7 @@ from repro.core.windowed import (
     dpp_greedy_windowed_lowrank,
     dpp_greedy_windowed_lowrank_batch,
 )
+from repro.obs.dispatch import record_greedy_map
 
 _BACKENDS = ("auto", "jnp", "pallas", "sharded")
 
@@ -182,6 +183,17 @@ def greedy_map(
         # path consumes a (B, M) mask (the jnp paths vmap over it, the
         # pallas kernel reshapes to (B, 1, M)), so broadcast here once
         mask = jnp.broadcast_to(mask, (kern.shape[0], mask.shape[0]))
+
+    # static shapes only — trace-safe; chunked runs count their launched
+    # steps per chunk (greedy_chunk), unchunked ones here
+    record_greedy_map(
+        "sharded" if spec.sharded()
+        else "pallas" if spec.backend == "pallas" else "jnp",
+        B=kern.shape[0] if kern.ndim == 3 else 1,
+        k=spec.k,
+        M=kern.shape[-1],
+        chunked=spec.chunk_size is not None,
+    )
 
     if spec.chunk_size is not None:
         # chunked whole-slate execution (pallas: fused multi-step chunk

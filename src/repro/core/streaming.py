@@ -49,6 +49,13 @@ import jax.numpy as jnp
 
 from repro.core.greedy_chol import NEG_INF, greedy_step_exact
 from repro.core.windowed import greedy_step_windowed
+from repro.obs.dispatch import record_chunk
+
+
+def _backend_label(spec) -> str:
+    if spec.sharded():
+        return "sharded"
+    return "pallas" if spec.backend == "pallas" else "jnp"
 
 
 class GreedyState(NamedTuple):
@@ -223,6 +230,13 @@ def greedy_chunk(
     """
     _check_kernel_args(spec, L, V)
     chunk = resolve_chunk(spec, chunk_size)
+    kern = L if L is not None else V
+    record_chunk(
+        _backend_label(spec),
+        B=kern.shape[0] if kern.ndim == 3 else 1,
+        chunk=chunk,
+        M=kern.shape[-1],
+    )
     if spec.sharded():
         from repro.core.sharded import dpp_greedy_sharded_stream_chunk
 
@@ -381,6 +395,12 @@ def greedy_chunk_slots(spec, state: GreedyState, V_slots, chunk: int):
     """
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
+    record_chunk(
+        _backend_label(spec),
+        B=V_slots.shape[0],
+        chunk=chunk,
+        M=V_slots.shape[-1],
+    )
     if spec.sharded():
         from repro.core.sharded import dpp_greedy_sharded_stream_chunk
 

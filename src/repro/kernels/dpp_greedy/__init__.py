@@ -3,7 +3,6 @@ from repro.kernels.dpp_greedy.ops import (
     dpp_greedy_stream_chunk,
     dpp_greedy_stream_init,
     dpp_greedy_stream_pad,
-    vmem_bytes,
 )
 from repro.kernels.dpp_greedy.ref import dpp_greedy_ref
 from repro.kernels.dpp_greedy.tiled import dpp_greedy_tiled
@@ -25,5 +24,4 @@ __all__ = [
     "VMEM_BUDGET_BYTES",
     "tile_vmem_bytes",
     "untiled_vmem_bytes",
-    "vmem_bytes",
 ]

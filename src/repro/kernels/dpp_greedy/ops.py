@@ -7,9 +7,9 @@ one ``pallas_call``); past the budget the **tiled streaming kernels**
 in ``tiled.py`` run instead — each greedy step is a double-buffered
 grid sweep over ``(D, tile_m)`` / ``(state_rows, tile_m)`` blocks, so
 large M no longer degrades to the pure-jnp path.  VMEM accounting is
-per *tile* (``tiling.tile_vmem_bytes``); the old whole-array
-``vmem_bytes`` survives as a deprecation shim and no longer gates
-anything.
+per *tile* (``tiling.tile_vmem_bytes``); the resident-mode whole-array
+working set is ``tiling.untiled_vmem_bytes`` (the pre-PR-4
+``vmem_bytes`` shim over it is gone).
 
 The pure-jnp reference remains reachable via ``force_jnp=True`` (and as
 a last resort when even one lane-width tile would not fit — pathological
@@ -32,9 +32,9 @@ from repro.kernels.dpp_greedy.tiled import (
     fused_chunk_exact,
     fused_chunk_windowed,
 )
-# VMEM_BUDGET_BYTES / tile_vmem_bytes / untiled_vmem_bytes / vmem_bytes
-# are re-exported for back-compat: pre-tiling callers imported the
-# budget and accounting from ops (the module that used to own the gate).
+# VMEM_BUDGET_BYTES / tile_vmem_bytes / untiled_vmem_bytes are
+# re-exported for back-compat: pre-tiling callers imported the budget
+# and accounting from ops (the module that used to own the gate).
 from repro.kernels.dpp_greedy.tiling import (  # noqa: F401
     LANE,
     SUBLANE,
@@ -43,8 +43,8 @@ from repro.kernels.dpp_greedy.tiling import (  # noqa: F401
     round_up as _round_up,
     tile_vmem_bytes,
     untiled_vmem_bytes,
-    vmem_bytes,
 )
+from repro.obs.dispatch import record_kernel_dispatch
 
 
 def dpp_greedy(
@@ -78,12 +78,23 @@ def dpp_greedy(
     if mask is None:
         mask = jnp.ones((B, M), bool)
     state_rows = k if window is None else min(window, k)
+    windowed = window is not None and window < k
     if force_jnp:
+        record_kernel_dispatch(
+            "jnp", D=D, M=M, state_rows=state_rows, windowed=windowed
+        )
         return dpp_greedy_ref(V, mask, k, eps, window=window)
 
     policy = tile_policy or TilePolicy(tile_m=tile_m)
-    windowed = window is not None and window < k
     mode, tm = policy.decide(D, M, state_rows, windowed)
+    record_kernel_dispatch(
+        mode, D=D, M=M, state_rows=state_rows, windowed=windowed, tile_m=tm,
+        vmem_bytes=(
+            untiled_vmem_bytes(D, M, state_rows) if mode == "resident"
+            else tile_vmem_bytes(D, tm, state_rows, windowed)
+            if mode == "tiled" else None
+        ),
+    )
     if mode == "jnp":  # even a single lane-width tile exceeds the budget
         return dpp_greedy_ref(V, mask, k, eps, window=window)
 
@@ -155,6 +166,10 @@ def dpp_greedy_stream_init(
     windowed = window is not None and window < k
     R = min(window, k) if windowed else k
     tile, Mp = _stream_tile(D, M, R, windowed, tile_m, tile_policy)
+    record_kernel_dispatch(
+        "fused_chunk", D=D, M=M, state_rows=R, windowed=windowed,
+        tile_m=tile, vmem_bytes=tile_vmem_bytes(D, tile, R, windowed),
+    )
     if mask is None:
         mask = jnp.ones((B, M), bool)
     elif mask.ndim == 1:

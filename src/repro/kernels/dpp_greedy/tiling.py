@@ -24,13 +24,14 @@ The pure-jnp path survives only as an explicit escape hatch
 (``force_jnp=True``) and as a last resort when even a single
 lane-width tile would not fit (pathological ``D``/``state_rows``).
 
-``vmem_bytes`` (the old whole-array accounting) is kept one release as
-a deprecation shim forwarding to :func:`untiled_vmem_bytes`.
+(The pre-tiling ``vmem_bytes`` name lived here as a DeprecationWarning
+shim for one release after PR 4 and is now removed; the resident-mode
+working set is :func:`untiled_vmem_bytes`, the per-tile model
+:func:`tile_vmem_bytes`.)
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
 LANE = 128
@@ -140,22 +141,3 @@ class TilePolicy:
         if tm == 0:
             return "jnp", None
         return "tiled", min(tm, round_up(M, LANE))
-
-
-def vmem_bytes(D: int, M: int, state_rows: int) -> int:
-    """Deprecated alias for :func:`untiled_vmem_bytes`.
-
-    The whole-array working set no longer gates kernel dispatch — past
-    the budget the tiled streaming kernels run instead of the jnp
-    fallback, and their VMEM use is per *tile*
-    (:func:`tile_vmem_bytes`).  This shim forwards for one release.
-    """
-    warnings.warn(
-        "vmem_bytes is deprecated: the whole-array VMEM check no longer "
-        "gates dispatch (see TilePolicy). Use untiled_vmem_bytes for the "
-        "resident-mode working set or tile_vmem_bytes for the per-tile "
-        "model.",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return untiled_vmem_bytes(D, M, state_rows)

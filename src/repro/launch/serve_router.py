@@ -13,6 +13,14 @@ are submitted to one ``Reranker.submit`` session; the driver pumps the
 router, measuring completion latency percentiles, time-to-first-chunk,
 sustained QPS and the batch fill ratio, and cross-checks a sample of
 completed slates index-for-index against per-request ``rerank``.
+
+``--trace-out trace.json`` writes every span of the run (the
+``router.pump`` decomposition among them) as Chrome ``trace_event``
+JSON — load it in https://ui.perfetto.dev.  ``--metrics-out`` then also
+embeds the metrics snapshot (kernel dispatch counts, marginal
+evaluations, jit cache misses) next to the driver numbers; the
+``jit_misses_after_warmup`` field is the structural no-re-jit check —
+0 means the measured loop ran entirely on cached computations.
 """
 from __future__ import annotations
 
@@ -24,11 +32,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_arch
 from repro.models import recsys as recsys_mod
 from repro.data import recsys_batches
 from repro.serving import (
     DPPRerankConfig,
+    ObsConfig,
     Reranker,
     RerankRequest,
     RouterConfig,
@@ -53,7 +63,17 @@ def main(argv=None):
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--parity-sample", type=int, default=4)
     ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--trace-out", default="",
+                    help="write the run's spans as Chrome trace_event JSON "
+                         "(Perfetto-loadable)")
     args = ap.parse_args(argv)
+
+    # observability is threaded through the serving configs, not turned
+    # on globally here — the run exercises the same wiring users get
+    ocfg = (
+        ObsConfig(enabled=True)
+        if (args.metrics_out or args.trace_out) else None
+    )
 
     spec = get_arch(args.arch)
     assert spec.family == "recsys", "serving driver targets the recsys family"
@@ -68,7 +88,7 @@ def main(argv=None):
     )
     rr = Reranker(rcfg, router_config=RouterConfig(
         slots=args.slots, chunk_size=args.chunk, max_queue=args.requests,
-        max_candidates=shortlist,
+        max_candidates=shortlist, obs=ocfg,
     ))
 
     # score every user against the shared candidate pool up front — the
@@ -114,13 +134,25 @@ def main(argv=None):
             rid=b,
         ))
 
-    # warm the slot geometry's compile out of the measurement
-    warm = [rr.submit(r) for r in reqs[: args.slots]]
+    # warm the slot geometry's compile out of the measurement; the warm
+    # set must cover the masked-admission program too (mask presence is
+    # a host-side branch — a distinct one-time compile the miss counter
+    # would otherwise report when the first masked request lands
+    # mid-measurement)
+    warm_reqs = list(reqs[: args.slots])
+    if warm_reqs and not any(r.mask is not None for r in warm_reqs):
+        masked = next((r for r in reqs if r.mask is not None), None)
+        if masked is not None:
+            warm_reqs[-1] = masked
+    warm = [rr.submit(r) for r in warm_reqs]
     rr.router.drain()
     rr = Reranker(rcfg, router_config=RouterConfig(
         slots=args.slots, chunk_size=args.chunk, max_queue=args.requests,
-        max_candidates=shortlist,
+        max_candidates=shortlist, obs=ocfg,
     ))
+    cm = obs.compile_monitor()
+    if cm is not None:
+        cm.mark()  # every compile past here is a measured-loop re-jit
 
     gap = 1.0 / args.qps
     t0 = time.perf_counter()
@@ -147,6 +179,9 @@ def main(argv=None):
 
     lat = np.array([done_at[id(h)] - arrived[id(h)] for h in handles])
     ttfc = np.array([h.ttfc for h in handles if h.ttfc is not None])
+    # read the miss counter BEFORE the parity sample: per-request rerank
+    # below legitimately compiles one whole-slate program per distinct k
+    misses_after_warmup = int(cm.since_mark()) if cm is not None else None
     parity_ok = True
     for h, req in list(zip(handles, reqs))[: args.parity_sample]:
         if h.timed_out:
@@ -172,10 +207,17 @@ def main(argv=None):
         "eps_stopped": st.eps_stopped,
         "parity_sample_ok": parity_ok,
     }
+    if misses_after_warmup is not None:
+        out["jit_misses_after_warmup"] = misses_after_warmup
     print(json.dumps(out, indent=1))
+    if obs.registry() is not None:
+        out["obs"] = obs.registry().snapshot()
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(out, f)
+    if args.trace_out and obs.tracer() is not None:
+        obs.tracer().write_chrome(args.trace_out)
+        print(f"trace: {args.trace_out} ({obs.tracer().total} spans)")
     if not parity_ok:
         raise SystemExit("router slates diverged from per-request rerank")
     return out

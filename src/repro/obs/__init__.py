@@ -1,0 +1,229 @@
+"""Zero-dependency observability: span tracing, a metrics registry, and
+dispatch/compile telemetry.
+
+Three pillars (see DESIGN.md §8 for the span taxonomy and metric names):
+
+* ``repro.obs.trace``    — nestable spans, ring-buffered, exported as
+  Chrome ``trace_event`` JSON (Perfetto-loadable), optional
+  ``jax.profiler.TraceAnnotation`` bridge;
+* ``repro.obs.metrics``  — named counters/gauges/histograms with label
+  sets, Prometheus text exposition + JSON snapshot;
+* ``repro.obs.dispatch`` — which kernel path actually ran, launched
+  steps / marginal-evaluation counts, and jit cache misses observed
+  through ``jax.monitoring``.
+
+**Off by default, near-zero when off.**  The module holds one
+process-global session (``_ACTIVE``); every hook in the hot paths is a
+single global read when no session is installed — ``span()`` returns a
+shared no-op singleton (no allocation), ``inc``/``gauge_set``/
+``observe`` return immediately.  Enable it:
+
+    from repro import obs
+
+    with obs.session(obs.ObsConfig(enabled=True)):
+        ...                                  # scoped
+    obs.enable(obs.ObsConfig(enabled=True))  # or process-wide
+
+or thread an ``ObsConfig`` through the serving configs —
+``DPPRerankConfig(obs=...)`` / ``RouterConfig(obs=...)`` install it
+when the ``Reranker``/router is constructed, and
+``repro.launch.serve_router --trace-out trace.json --metrics-out
+metrics.json`` surfaces both exports from the CLI.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.trace import SpanTracer, validate_chrome_trace  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """What to observe.  ``enabled=False`` (the default) is a hard off
+    switch: nothing is installed and every hook is a cheap no-op."""
+
+    enabled: bool = False
+    trace: bool = True  # span tracer
+    metrics: bool = True  # metrics registry
+    compile_monitor: bool = True  # jit cache-miss counting (needs metrics)
+    ring_size: int = 65536  # span ring buffer capacity
+    jax_annotations: bool = False  # bridge spans to jax.profiler
+
+    def __post_init__(self):
+        if self.ring_size < 1:
+            raise ValueError(
+                f"ring_size must be >= 1, got {self.ring_size}"
+            )
+
+
+class Obs:
+    """One installed observability session (tracer + registry +
+    compile monitor, each optional per :class:`ObsConfig`)."""
+
+    def __init__(self, config: ObsConfig):
+        self.config = config
+        self.tracer = (
+            SpanTracer(config.ring_size, config.jax_annotations)
+            if config.trace else None
+        )
+        self.registry = MetricsRegistry() if config.metrics else None
+        self.compile_monitor = None
+        if config.compile_monitor and self.registry is not None:
+            from repro.obs.dispatch import CompileMonitor
+
+            self.compile_monitor = CompileMonitor(self.registry).install()
+
+    def close(self) -> None:
+        if self.compile_monitor is not None:
+            self.compile_monitor.uninstall()
+
+
+_ACTIVE: Optional[Obs] = None
+
+
+class _NullSpan:
+    """The disabled-path span: one shared instance, no state."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return False
+
+    def set(self, **attrs):
+        return self
+
+
+NULL_SPAN = _NullSpan()
+
+
+def enable(config: Optional[ObsConfig] = None) -> Optional[Obs]:
+    """Install a process-global observability session and return it.
+
+    ``None`` defaults to everything on.  A config with
+    ``enabled=False`` is a no-op returning None (so callers can thread
+    user configs through unconditionally).  If a session is already
+    installed it is kept and returned — ``disable()`` first to replace
+    it.
+    """
+    global _ACTIVE
+    if config is None:
+        config = ObsConfig(enabled=True)
+    if not config.enabled:
+        return None
+    if _ACTIVE is None:
+        _ACTIVE = Obs(config)
+    return _ACTIVE
+
+
+def disable() -> None:
+    """Tear down the global session (hooks go back to no-ops)."""
+    global _ACTIVE
+    if _ACTIVE is not None:
+        _ACTIVE.close()
+        _ACTIVE = None
+
+
+def enabled() -> bool:
+    return _ACTIVE is not None
+
+
+def active() -> Optional[Obs]:
+    return _ACTIVE
+
+
+def tracer() -> Optional[SpanTracer]:
+    a = _ACTIVE
+    return a.tracer if a is not None else None
+
+
+def registry() -> Optional[MetricsRegistry]:
+    a = _ACTIVE
+    return a.registry if a is not None else None
+
+
+def compile_monitor():
+    a = _ACTIVE
+    return a.compile_monitor if a is not None else None
+
+
+@contextlib.contextmanager
+def session(config: Optional[ObsConfig] = None):
+    """Scoped ``enable``/``disable`` (no-op if a session already runs,
+    or if ``config.enabled`` is False)."""
+    installed = _ACTIVE is None and enable(config) is not None
+    try:
+        yield _ACTIVE
+    finally:
+        if installed:
+            disable()
+
+
+# ---------------------------------------------------------------------------
+# Hot-path hooks (all a single global read when disabled)
+# ---------------------------------------------------------------------------
+
+
+def span(name: str, **attrs):
+    """A tracer span, or the shared no-op singleton when tracing is off
+    — the hot path allocates nothing while disabled."""
+    a = _ACTIVE
+    if a is None or a.tracer is None:
+        return NULL_SPAN
+    return a.tracer.span(name, **attrs)
+
+
+def inc(name: str, value: float = 1, **labels) -> None:
+    a = _ACTIVE
+    if a is None or a.registry is None:
+        return
+    a.registry.counter(name).inc(value, **labels)
+
+
+def gauge_set(name: str, value: float, **labels) -> None:
+    a = _ACTIVE
+    if a is None or a.registry is None:
+        return
+    a.registry.gauge(name).set(value, **labels)
+
+
+def observe(name: str, value: float, **labels) -> None:
+    a = _ACTIVE
+    if a is None or a.registry is None:
+        return
+    a.registry.histogram(name).observe(value, **labels)
+
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_SPAN",
+    "Obs",
+    "ObsConfig",
+    "SpanTracer",
+    "active",
+    "compile_monitor",
+    "disable",
+    "enable",
+    "enabled",
+    "gauge_set",
+    "inc",
+    "observe",
+    "registry",
+    "session",
+    "span",
+    "tracer",
+    "validate_chrome_trace",
+]

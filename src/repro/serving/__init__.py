@@ -7,6 +7,7 @@ surface (``rerank`` / ``rerank_batch`` / ``rerank_stream`` /
 ``sharded_rerank`` / ``sharded_rerank_stream``) survives one release as
 ``DeprecationWarning`` shims.
 """
+from repro.obs import ObsConfig
 from repro.serving.api import Reranker, RerankRequest
 from repro.serving.reranker import (
     DPPRerankConfig,
@@ -24,6 +25,7 @@ from repro.serving.sharded_rerank import sharded_rerank, sharded_rerank_stream
 
 __all__ = [
     "DPPRerankConfig",
+    "ObsConfig",
     "Reranker",
     "RerankRequest",
     "RerankRouter",

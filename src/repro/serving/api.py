@@ -44,6 +44,7 @@ from typing import Any, Iterator, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.dispatch import greedy_map
 from repro.serving.reranker import DPPRerankConfig, _shortlist_kernel
 
@@ -136,6 +137,8 @@ class Reranker:
         self.cfg = cfg
         self._router_config = router_config
         self._router = None
+        if cfg.obs is not None:  # enabled=False configs are a no-op
+            obs.enable(cfg.obs)
 
     # -- request-side resolution -------------------------------------------
 
@@ -172,15 +175,21 @@ class Reranker:
         the single-device path."""
         req = self._as_request(req, kwargs)
         cfg = self._cfg_for(req)
-        if cfg.mesh is not None:
-            from repro.serving.sharded_rerank import _sharded_kernel
+        with obs.span(
+            "serving.rerank", M=req.num_candidates, k=cfg.slate_size,
+            batched=req.batched,
+        ):
+            if cfg.mesh is not None:
+                from repro.serving.sharded_rerank import _sharded_kernel
 
-            return _sharded_rerank_impl(
-                req.scores, req.feats, cfg, req.mask, _sharded_kernel
-            )
-        if req.batched:
-            return _rerank_batch_impl(req.scores, req.feats, cfg, req.mask)
-        return _rerank_impl(req.scores, req.feats, cfg, req.mask)
+                return _sharded_rerank_impl(
+                    req.scores, req.feats, cfg, req.mask, _sharded_kernel
+                )
+            if req.batched:
+                return _rerank_batch_impl(
+                    req.scores, req.feats, cfg, req.mask
+                )
+            return _rerank_impl(req.scores, req.feats, cfg, req.mask)
 
     # -- chunked streaming -------------------------------------------------
 
@@ -219,25 +228,32 @@ class Reranker:
         chunk = resolve_chunk(
             spec, chunk_size if chunk_size is not None else cfg.chunk_size
         )
-        if cfg.mesh is not None:
-            from repro.serving.sharded_rerank import _sharded_kernel
+        with obs.span(
+            "serving.stream.prep", M=req.num_candidates, k=cfg.slate_size,
+            chunk=chunk,
+        ):
+            if cfg.mesh is not None:
+                from repro.serving.sharded_rerank import _sharded_kernel
 
-            V, m_sel = _sharded_kernel(req.scores, req.feats, cfg, req.mask)
-            top_i = None
-        else:
-            V, m_sel, top_i = _shortlist_kernel(
-                req.scores, req.feats, cfg, req.mask
-            )
-        state = greedy_init(spec, V=V, mask=m_sel)
-        V = slot_pad_v(spec, V, state)
+                V, m_sel = _sharded_kernel(
+                    req.scores, req.feats, cfg, req.mask
+                )
+                top_i = None
+            else:
+                V, m_sel, top_i = _shortlist_kernel(
+                    req.scores, req.feats, cfg, req.mask
+                )
+            state = greedy_init(spec, V=V, mask=m_sel)
+            V = slot_pad_v(spec, V, state)
 
         def emit():
             done, st = 0, state
             while done < cfg.slate_size:
                 c = min(chunk, cfg.slate_size - done)
-                st, sel, dh = greedy_chunk(spec, st, V=V, chunk_size=c)
-                if top_i is not None:
-                    sel = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
+                with obs.span("serving.stream.chunk", chunk=c, done=done):
+                    st, sel, dh = greedy_chunk(spec, st, V=V, chunk_size=c)
+                    if top_i is not None:
+                        sel = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
                 yield sel.astype(jnp.int32), dh
                 done += c
 

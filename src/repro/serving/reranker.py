@@ -63,6 +63,7 @@ import jax.numpy as jnp
 
 from repro.core.dispatch import GreedySpec
 from repro.core.kernel_matrix import map_relevance
+from repro.obs import ObsConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +91,7 @@ class DPPRerankConfig:
     tile_m: Optional[int] = None  # Pallas candidate-axis tile (None = auto)
     interpret: bool = True  # Pallas interpret mode (False on real TPU)
     chunk_size: Optional[int] = None  # rerank_stream emission granularity
+    obs: Optional[ObsConfig] = None  # observability (installed by Reranker)
 
     def __post_init__(self):
         if self.slate_size <= 0:

@@ -35,13 +35,27 @@ cycle; ``handle.result()`` pumps until that request finishes.  Requests
 past ``max_queue`` are refused with :class:`RouterQueueFull`
 (backpressure), admission is strictly FIFO (no starvation), and a
 request whose ``deadline`` lapses is evicted with its partial slate and
-``timed_out=True``.  :class:`RouterStats` exposes the serving counters
-and gauges (queue depth, slot occupancy, batch fill ratio, TTFC);
-``RouterConfig.metrics_hook`` receives a snapshot after every pump.
+``timed_out=True``.
+
+**Observability.**  The router's counters live in a
+``repro.obs.MetricsRegistry`` — the process-global one when an
+observability session is installed (``RouterConfig.obs`` /
+``DPPRerankConfig.obs`` install it at construction), else a private
+per-router registry — labeled ``router="rN"`` so concurrent routers
+never mix.  :class:`RouterStats` is a *view* built from those metrics:
+``router.stats`` and the per-pump ``RouterConfig.metrics_hook``
+snapshot keep their exact pre-registry shape (fields, ``fill_ratio``,
+``mean_ttfc``), so existing hooks work unchanged.  A hook that raises
+is logged and counted (``router_hook_errors_total``), never fatal.
+Every ``pump()`` emits a ``router.pump`` span decomposed into
+``.sync`` / ``.evict`` / ``.admit`` / ``.launch`` / ``.materialize``
+child spans (see DESIGN.md §8).
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import logging
 import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
@@ -50,6 +64,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.streaming import (
     greedy_chunk_slots,
     greedy_slot_state,
@@ -58,7 +73,13 @@ from repro.core.streaming import (
     state_evict,
     state_splice,
 )
+from repro.obs import MetricsRegistry, ObsConfig
 from repro.serving.reranker import DPPRerankConfig, _shortlist_kernel
+
+_log = logging.getLogger(__name__)
+
+# router="rN" label values; one registry can host many routers
+_ROUTER_IDS = itertools.count()
 
 
 class RouterQueueFull(RuntimeError):
@@ -82,6 +103,7 @@ class RouterConfig:
     max_slate: Optional[int] = None  # slot capacity; None -> cfg.slate_size
     max_candidates: Optional[int] = None  # bucket width; None -> cfg.shortlist
     metrics_hook: Optional[Callable[["RouterStats"], None]] = None
+    obs: Optional[ObsConfig] = None  # installed at router construction
 
     def __post_init__(self):
         if self.slots < 1:
@@ -102,7 +124,12 @@ class RouterConfig:
 
 @dataclasses.dataclass
 class RouterStats:
-    """Counters (monotonic) and gauges (last pump) for the router."""
+    """Counters (monotonic) and gauges (last pump) for the router.
+
+    Since the metrics-registry refactor this is a *value object* built
+    on demand from the router's labeled metrics (``router.stats`` /
+    the ``metrics_hook`` snapshot) — same fields and derived
+    properties as when it was the storage itself."""
 
     submitted: int = 0
     admitted: int = 0
@@ -244,7 +271,15 @@ class RerankRouter:
         self.spec = dataclasses.replace(
             cfg, slate_size=self.capacity
         ).greedy_spec()
-        self.stats = RouterStats()
+        # observability: thread the config through (enabled=False and
+        # None are both no-ops); publish into the global registry when a
+        # session is installed, else into a private one, labeled with a
+        # per-router id so concurrent routers never mix counters
+        ocfg = self.rcfg.obs if self.rcfg.obs is not None else cfg.obs
+        if ocfg is not None:
+            obs.enable(ocfg)
+        self._reg: MetricsRegistry = obs.registry() or MetricsRegistry()
+        self._rid_label = f"r{next(_ROUTER_IDS)}"
         self._queue: Deque[_Live] = deque()
         self._active: Dict[int, _Live] = {}
         self._free: List[int] = list(range(self.rcfg.slots))
@@ -252,6 +287,46 @@ class RerankRouter:
         self._V = None  # (S, D*, M*) stacked kernel operand (lazy)
         self._D: Optional[int] = None  # session feature dim (first submit)
         self._inflight = None  # (state, sel, dh) of the launched chunk
+
+    # -- metrics -------------------------------------------------------------
+
+    def _count(self, event: str, n: int = 1) -> None:
+        self._reg.counter(
+            "router_requests_total",
+            "request lifecycle events through the router",
+        ).inc(n, router=self._rid_label, event=event)
+
+    def _gauge(self, name: str, value: float, help: str = "") -> None:
+        self._reg.gauge(name, help).set(value, router=self._rid_label)
+
+    @property
+    def stats(self) -> RouterStats:
+        """The serving counters and gauges as a :class:`RouterStats`
+        value object — a fresh snapshot on every read, built from this
+        router's labeled metrics."""
+        reg, rid = self._reg, self._rid_label
+        ev = reg.counter("router_requests_total")
+        lanes = reg.counter("router_lane_steps_total")
+        ttfc = reg.histogram("router_ttfc_seconds")
+        return RouterStats(
+            submitted=int(ev.value(router=rid, event="submitted")),
+            admitted=int(ev.value(router=rid, event="admitted")),
+            completed=int(ev.value(router=rid, event="completed")),
+            eps_stopped=int(ev.value(router=rid, event="eps_stopped")),
+            timed_out=int(ev.value(router=rid, event="timed_out")),
+            rejected=int(ev.value(router=rid, event="rejected")),
+            chunks_launched=int(
+                reg.counter("router_chunks_launched_total").value(router=rid)
+            ),
+            lane_steps_active=int(lanes.value(router=rid, lanes="active")),
+            lane_steps_total=int(lanes.value(router=rid, lanes="all")),
+            queue_depth=int(reg.gauge("router_queue_depth").value(router=rid)),
+            slot_occupancy=int(
+                reg.gauge("router_slot_occupancy").value(router=rid)
+            ),
+            ttfc_sum=ttfc.sum(router=rid),
+            ttfc_count=ttfc.count(router=rid),
+        )
 
     # -- admission -----------------------------------------------------------
 
@@ -293,7 +368,7 @@ class RerankRouter:
                 f"serves one model"
             )
         if len(self._queue) >= self.rcfg.max_queue:
-            self.stats.rejected += 1
+            self._count("rejected")
             raise RouterQueueFull(
                 f"admission queue full ({self.rcfg.max_queue}); pump() "
                 f"or consume handles before resubmitting"
@@ -305,8 +380,8 @@ class RerankRouter:
             None if req.deadline is None else now + req.deadline,
         )
         self._queue.append(live)
-        self.stats.submitted += 1
-        self.stats.queue_depth = len(self._queue)
+        self._count("submitted")
+        self._gauge("router_queue_depth", len(self._queue))
         return handle
 
     # -- request preparation -------------------------------------------------
@@ -347,7 +422,7 @@ class RerankRouter:
             live = self._queue.popleft()
             if live.deadline_at is not None and now > live.deadline_at:
                 live.handle._finish(timed_out=True)
-                self.stats.timed_out += 1
+                self._count("timed_out")
                 continue
             if self._state is None:
                 self._state, self._V = greedy_slots_init(
@@ -358,16 +433,26 @@ class RerankRouter:
             self._state = state_splice(self._state, single, slot)
             self._V = self._V.at[slot].set(V_lane)
             self._active[slot] = live
-            self.stats.admitted += 1
+            self._count("admitted")
 
     # -- the pump ------------------------------------------------------------
 
     def _launch(self):
         if not self._active:
             return None
-        self.stats.chunks_launched += 1
-        self.stats.lane_steps_active += len(self._active) * self.chunk
-        self.stats.lane_steps_total += self.rcfg.slots * self.chunk
+        rid = self._rid_label
+        self._reg.counter(
+            "router_chunks_launched_total", "batched chunk calls dispatched"
+        ).inc(router=rid)
+        self._reg.counter(
+            "router_lane_steps_total",
+            "greedy lane-steps launched (lanes=active: occupied lanes "
+            "only; lanes=all: including parked lanes — the ratio is the "
+            "batch fill)",
+        ).inc(len(self._active) * self.chunk, router=rid, lanes="active")
+        self._reg.counter("router_lane_steps_total").inc(
+            self.rcfg.slots * self.chunk, router=rid, lanes="all"
+        )
         return greedy_chunk_slots(self.spec, self._state, self._V, self.chunk)
 
     def _evict(self, slot: int):
@@ -383,61 +468,95 @@ class RerankRouter:
         eps-stopped / expired lanes -> admit from the queue -> launch
         the next chunk (async) -> materialize and deliver the previous
         chunk's selections while the device computes the next one.
+
+        Each phase runs inside its own span (``router.pump.sync`` /
+        ``.evict`` / ``.admit`` / ``.launch`` / ``.materialize``) under
+        one ``router.pump`` parent, so a trace decomposes every cycle's
+        latency; all spans are no-ops while observability is off.
         """
-        now = time.monotonic()
-        if self._inflight is not None:
-            st, sel, dh = self._inflight
-            # the one device sync of the cycle: S bools
-            stopped = np.asarray(st.stopped)
-            self._state = st
-            deliveries = []
-            for slot, live in sorted(self._active.items()):
-                consume = min(self.chunk, live.k - live.count)
-                lane_stopped = bool(stopped[slot])
-                expired = (
-                    live.deadline_at is not None and now > live.deadline_at
-                )
-                complete = live.count + consume >= live.k
-                deliveries.append(
-                    (slot, live, consume, lane_stopped, expired, complete)
-                )
-                if lane_stopped or expired or complete:
+        with obs.span("router.pump"):
+            now = time.monotonic()
+            sel = dh = None
+            deliveries: list = []
+            evictions: List[int] = []
+            if self._inflight is not None:
+                st, sel, dh = self._inflight
+                with obs.span("router.pump.sync"):
+                    # the one device sync of the cycle: S bools
+                    stopped = np.asarray(st.stopped)
+                self._state = st
+                for slot, live in sorted(self._active.items()):
+                    consume = min(self.chunk, live.k - live.count)
+                    lane_stopped = bool(stopped[slot])
+                    expired = (
+                        live.deadline_at is not None and now > live.deadline_at
+                    )
+                    complete = live.count + consume >= live.k
+                    deliveries.append(
+                        (slot, live, consume, lane_stopped, expired, complete)
+                    )
+                    if lane_stopped or expired or complete:
+                        evictions.append(slot)
+            with obs.span("router.pump.evict", lanes=len(evictions)):
+                for slot in evictions:
                     self._evict(slot)
-            self._admit(now)
-            nxt = self._launch()  # async dispatch: device starts chunk N+1
+            with obs.span("router.pump.admit", queued=len(self._queue)):
+                self._admit(now)
+            with obs.span("router.pump.launch", lanes=len(self._active)):
+                nxt = self._launch()  # async: device starts chunk N+1
             # ... while the host unpacks chunk N
-            sel_np, dh_np = np.asarray(sel), np.asarray(dh)
-            for slot, live, consume, lane_stopped, expired, complete in (
-                    deliveries):
-                idx = sel_np[slot, :consume].astype(np.int32)
-                if live.top_i is not None:
-                    idx = np.where(idx >= 0, live.top_i[np.clip(idx, 0, None)],
-                                   -1).astype(np.int32)
-                first = live.handle.ttfc is None
-                live.handle._deliver(
-                    idx, dh_np[slot, :consume].astype(np.float32),
-                    time.monotonic(), live.submit_t,
-                )
-                if first and live.handle.ttfc is not None:
-                    self.stats.ttfc_sum += live.handle.ttfc
-                    self.stats.ttfc_count += 1
-                live.count += consume
-                if lane_stopped or complete:
-                    live.handle._finish(timed_out=False)
-                    self.stats.completed += 1
-                    if lane_stopped and not complete:
-                        self.stats.eps_stopped += 1
-                elif expired:
-                    live.handle._finish(timed_out=True)
-                    self.stats.timed_out += 1
+            with obs.span("router.pump.materialize",
+                          deliveries=len(deliveries)):
+                if deliveries:
+                    sel_np, dh_np = np.asarray(sel), np.asarray(dh)
+                for slot, live, consume, lane_stopped, expired, complete in (
+                        deliveries):
+                    idx = sel_np[slot, :consume].astype(np.int32)
+                    if live.top_i is not None:
+                        idx = np.where(
+                            idx >= 0, live.top_i[np.clip(idx, 0, None)], -1
+                        ).astype(np.int32)
+                    first = live.handle.ttfc is None
+                    live.handle._deliver(
+                        idx, dh_np[slot, :consume].astype(np.float32),
+                        time.monotonic(), live.submit_t,
+                    )
+                    if first and live.handle.ttfc is not None:
+                        self._reg.histogram(
+                            "router_ttfc_seconds",
+                            "seconds from submit to the first delivered chunk",
+                        ).observe(live.handle.ttfc, router=self._rid_label)
+                    live.count += consume
+                    if lane_stopped or complete:
+                        live.handle._finish(timed_out=False)
+                        self._count("completed")
+                        if lane_stopped and not complete:
+                            self._count("eps_stopped")
+                    elif expired:
+                        live.handle._finish(timed_out=True)
+                        self._count("timed_out")
             self._inflight = nxt
-        else:
-            self._admit(now)
-            self._inflight = self._launch()
-        self.stats.queue_depth = len(self._queue)
-        self.stats.slot_occupancy = len(self._active)
-        if self.rcfg.metrics_hook is not None:
-            self.rcfg.metrics_hook(self.stats.snapshot())
+            self._gauge(
+                "router_queue_depth", len(self._queue),
+                "requests waiting for admission",
+            )
+            self._gauge(
+                "router_slot_occupancy", len(self._active),
+                "slots holding a live request",
+            )
+            if self.rcfg.metrics_hook is not None:
+                snap = self.stats
+                try:
+                    self.rcfg.metrics_hook(snap)
+                except Exception:
+                    # a broken hook must never take the serving loop down
+                    _log.exception(
+                        "RouterConfig.metrics_hook raised; continuing"
+                    )
+                    self._reg.counter(
+                        "router_hook_errors_total",
+                        "metrics_hook exceptions swallowed by pump()",
+                    ).inc(router=self._rid_label)
 
     def drain(self, max_pumps: int = 100_000):
         """Pump until every queued and active request has finished."""

@@ -23,6 +23,8 @@ The rebuild oracle materializes the dense (M, M) kernel — fine at test
 sizes; the huge-M acceptance tests keep the low-rank incremental
 parametrization.
 """
+import os
+
 import numpy as np
 import pytest
 import jax.numpy as jnp
@@ -33,6 +35,25 @@ from repro.core.windowed import (
     dpp_greedy_windowed_lowrank,
     dpp_greedy_windowed_rebuild,
 )
+
+
+@pytest.fixture(autouse=True)
+def _obs_lane():
+    """CI's obs lane (``REPRO_OBS=1``) keeps a live observability
+    session installed across every test, so the whole differential
+    suite doubles as proof that telemetry never changes results.
+    Unset (the default), this is a no-op and obs stays off."""
+    if not os.environ.get("REPRO_OBS"):
+        yield
+        return
+    from repro import obs
+
+    fresh = not obs.enabled()
+    if fresh:
+        obs.enable(obs.ObsConfig(enabled=True))
+    yield
+    if fresh:
+        obs.disable()
 
 
 def make_greedy_inputs(seed, B, D, M, alpha=2.0, dtype=jnp.float32):

@@ -318,12 +318,20 @@ def test_tile_policy_validation():
         )
 
 
-def test_vmem_bytes_deprecation_shim():
-    from repro.kernels.dpp_greedy import vmem_bytes
+def test_vmem_bytes_shim_removed():
+    # The pre-tiling ``vmem_bytes`` name shipped as a DeprecationWarning
+    # shim for one release after PR 4; it is gone now everywhere it was
+    # re-exported.  ``untiled_vmem_bytes`` is the resident-mode model.
+    import importlib
 
-    with pytest.warns(DeprecationWarning, match="no longer gates"):
-        legacy = vmem_bytes(64, 4096, 16)
-    assert legacy == untiled_vmem_bytes(64, 4096, 16)
+    # (``import ... as pkg`` would grab the ``dpp_greedy`` *function*
+    # re-exported by repro.kernels — go through importlib instead)
+    pkg = importlib.import_module("repro.kernels.dpp_greedy")
+    from repro.kernels.dpp_greedy import ops, tiling
+
+    for mod in (pkg, ops, tiling):
+        assert not hasattr(mod, "vmem_bytes")
+    assert "vmem_bytes" not in pkg.__all__
 
 
 def test_greedy_spec_tile_m_validation_and_threading():
