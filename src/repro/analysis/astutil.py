@@ -1,0 +1,231 @@
+"""Shared AST plumbing for the static checkers (stdlib ``ast`` only).
+
+The load-bearing pieces:
+
+* :func:`jit_statics` — recognises the repo's jit idioms
+  (``@jax.jit``, ``@functools.partial(jax.jit, static_argnames=...)``,
+  ``name = jax.jit(fn, static_argnames=...)``) and extracts the static
+  argument names.
+* :func:`is_kernel_fn` — Pallas kernel bodies are identified by their
+  ``*_ref`` Ref parameters (the repo-wide kernel convention).
+* :class:`TracedNames` — an "is this expression trace-safe to branch
+  on" evaluator.  Taint starts at the *traced* function parameters
+  (everything not named static; the ``*_ref`` Refs in kernels) and
+  propagates through assignments; ``.shape``-family attributes,
+  ``is None`` checks and ``len``/``isinstance`` calls launder taint
+  back to host values.  Names with no taint — closure captures,
+  globals, statics — are host-valued at trace time, so branching on
+  them is fine.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable, Iterator, Optional
+
+# attribute reads that yield host (Python) values even on tracers
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+# calls that yield host values from traced arguments
+STATIC_CALLS = {"len", "isinstance", "type", "hasattr", "getattr",
+                "range", "min", "max", "abs", "round", "tuple", "list",
+                "sorted", "zip", "enumerate", "round_up"}
+
+
+def iter_py_files(paths: Iterable[str]) -> Iterator[str]:
+    """Expand files/directories into .py files (sorted, deduped),
+    skipping hidden directories and __pycache__."""
+    seen = set()
+    for path in paths:
+        if os.path.isfile(path):
+            if path.endswith(".py") and path not in seen:
+                seen.add(path)
+                yield path
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(
+                d for d in dirs
+                if not d.startswith(".") and d != "__pycache__"
+            )
+            for name in sorted(files):
+                full = os.path.join(root, name)
+                if name.endswith(".py") and full not in seen:
+                    seen.add(full)
+                    yield full
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.experimental.pallas`` -> that string; None when the
+    expression is not a plain dotted name."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _string_elts(node: ast.AST) -> list[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+        return out
+    return []
+
+
+def _is_jit_name(name: Optional[str]) -> bool:
+    return name in ("jax.jit", "jit", "pjit", "jax.pjit")
+
+
+def jit_statics(fn: ast.FunctionDef) -> Optional[set[str]]:
+    """If ``fn`` is jit-decorated, the set of static argument names
+    (empty for a bare ``@jax.jit``); None when not jitted."""
+    for dec in fn.decorator_list:
+        if _is_jit_name(dotted_name(dec)):
+            return set()
+        if isinstance(dec, ast.Call):
+            callee = dotted_name(dec.func)
+            if _is_jit_name(callee):
+                return set(_jit_call_statics(dec))
+            if callee in ("functools.partial", "partial") and dec.args:
+                if _is_jit_name(dotted_name(dec.args[0])):
+                    return set(_jit_call_statics(dec))
+    return None
+
+
+def _jit_call_statics(call: ast.Call) -> list[str]:
+    names: list[str] = []
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            names.extend(_string_elts(kw.value))
+    return names
+
+
+def jit_call_assignments(
+    tree: ast.Module,
+) -> list[tuple[str, set[str], ast.Call]]:
+    """Module-level ``name = jax.jit(fn, static_argnames=...)`` bindings
+    -> ``(wrapped function name, static names, the jit call)``."""
+    out = []
+    for node in tree.body:
+        if not (isinstance(node, ast.Assign) and
+                isinstance(node.value, ast.Call)):
+            continue
+        call = node.value
+        if not _is_jit_name(dotted_name(call.func)) or not call.args:
+            continue
+        target = dotted_name(call.args[0])
+        if target is not None:
+            out.append((target, set(_jit_call_statics(call)), call))
+    return out
+
+
+def is_kernel_fn(fn: ast.FunctionDef) -> bool:
+    """Pallas kernel body: positional parameters follow the repo's
+    ``*_ref`` Ref naming convention."""
+    refs = [a for a in fn.args.args if a.arg.endswith("_ref")]
+    return len(refs) >= 2
+
+
+def param_names(fn: ast.FunctionDef) -> set[str]:
+    args = fn.args
+    names = {a.arg for a in args.args + args.kwonlyargs + args.posonlyargs}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    return names
+
+
+class TracedNames:
+    """Tracks which local names carry traced (device) values inside a
+    traced scope, and classifies expressions.
+
+    Taint semantics, deliberately precise-over-complete: a finding
+    requires provable taint from a traced parameter, so closure
+    captures, globals and helper calls on host values never fire.
+    ``.shape``/``is None``/``len()`` are host reads even on tracers."""
+
+    def __init__(self, traced: Iterable[str] = ()):  # noqa: D107
+        self.names = set(traced)
+
+    def observe_assign(self, node: ast.stmt) -> None:
+        if isinstance(node, ast.Assign):
+            value, targets = node.value, node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            value, targets = node.value, [node.target]
+        elif isinstance(node, ast.AugAssign):
+            value, targets = node.value, [node.target]
+        else:
+            return
+        traced = self.is_traced(value)
+        for target in targets:
+            for name in _target_names(target):
+                if traced:
+                    self.names.add(name)
+                else:
+                    self.names.discard(name)
+
+    def is_traced(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            return self.is_traced(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_traced(node.value) or self.is_traced(node.slice)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.is_traced(e) for e in node.elts)
+        if isinstance(node, ast.Slice):
+            return any(
+                self.is_traced(p)
+                for p in (node.lower, node.upper, node.step)
+                if p is not None
+            )
+        if isinstance(node, ast.UnaryOp):
+            return self.is_traced(node.operand)
+        if isinstance(node, ast.BinOp):
+            return self.is_traced(node.left) or self.is_traced(node.right)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_traced(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return any(
+                self.is_traced(p) for p in (node.test, node.body, node.orelse)
+            )
+        if isinstance(node, ast.Compare):
+            # `x is None` is a host identity check even on tracers
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return self.is_traced(node.left) or any(
+                self.is_traced(c) for c in node.comparators
+            )
+        if isinstance(node, ast.Call):
+            callee = dotted_name(node.func)
+            if callee in STATIC_CALLS:
+                return False
+            # method calls on traced values stay traced (x.sum());
+            # taint also flows in through arguments
+            return (
+                self.is_traced(node.func)
+                or any(self.is_traced(a) for a in node.args)
+                or any(self.is_traced(kw.value) for kw in node.keywords)
+            )
+        return False
+
+
+def _target_names(target: ast.AST) -> Iterator[str]:
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for e in target.elts:
+            yield from _target_names(e)
+    elif isinstance(target, ast.Starred):
+        yield from _target_names(target.value)

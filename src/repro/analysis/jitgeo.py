@@ -1,0 +1,277 @@
+"""jit-geometry / recompile-hazard checker (rules jit-static-missing,
+jit-static-unhashable, router-geometry).
+
+Two jobs:
+
+1. **jit boundary hygiene** — every ``static_argnames`` entry must name
+   a real parameter (a typo leaves the intended argument traced, which
+   silently re-specializes nothing and hides geometry churn), and no
+   static parameter may be array-typed or receive an unhashable
+   literal (jit raises at call time — or worse, hashes a request-
+   varying value and recompiles per request).
+
+2. **router geometry proof** — in the class that launches the slot
+   chunk step (``greedy_chunk_slots``), every attribute feeding the
+   compiled geometry must be written exactly once: in ``__init__``, or
+   (for the lazily-materialised ones) under an ``if self.x is None:``
+   guard.  With exactly one launch site and write-once geometry, every
+   launch after warmup reuses the same compiled signature — the static
+   counterpart of the fig8 ``jit_misses_after_warmup == 0`` gate.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.astutil import (
+    dotted_name,
+    jit_call_assignments,
+    jit_statics,
+    param_names,
+)
+from repro.analysis.findings import Finding
+
+# the slot-batched chunk launch and the state initialiser whose
+# arguments pin the router's compiled geometry
+CHUNK_LAUNCH = "greedy_chunk_slots"
+STATE_INIT = "greedy_slots_init"
+
+_ARRAYISH = ("ndarray", "Array", "jnp.", "jax.")
+_UNHASHABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                        ast.DictComp, ast.SetComp)
+
+
+def check_module(path: str, tree: ast.Module) -> list[Finding]:
+    findings: list[Finding] = []
+    _check_jit_statics(path, tree, findings)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            summary = router_geometry_summary(node)
+            if summary is not None:
+                for line, message in summary["violations"]:
+                    findings.append(
+                        Finding(path, line, "router-geometry", message)
+                    )
+    return findings
+
+
+# --------------------------------------------------------------------------
+# jit-static-missing / jit-static-unhashable
+# --------------------------------------------------------------------------
+
+
+def _check_jit_statics(
+    path: str, tree: ast.Module, findings: list[Finding]
+) -> None:
+    defs = {n.name: n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+    jitted: dict[str, set[str]] = {}
+    for node in defs.values():
+        statics = jit_statics(node)
+        if statics is not None:
+            jitted[node.name] = statics
+    for name, statics, call in jit_call_assignments(tree):
+        jitted[name] = jitted.get(name, set()) | statics
+
+    for name, statics in jitted.items():
+        fn = defs.get(name)
+        if fn is None:
+            continue
+        params = param_names(fn)
+        anchor = fn.lineno
+        for static in sorted(statics):
+            if static not in params:
+                findings.append(Finding(
+                    path, anchor, "jit-static-missing",
+                    f"static_argnames entry {static!r} is not a "
+                    f"parameter of {name}() — the intended argument "
+                    f"stays traced",
+                ))
+        for arg in fn.args.args + fn.args.kwonlyargs + fn.args.posonlyargs:
+            if arg.arg not in statics:
+                continue
+            ann = arg.annotation
+            ann_src = ast.unparse(ann) if ann is not None else ""
+            if ann_src and any(tok in ann_src for tok in _ARRAYISH):
+                findings.append(Finding(
+                    path, arg.lineno, "jit-static-unhashable",
+                    f"static parameter {arg.arg!r} of {name}() is "
+                    f"annotated {ann_src!r} — arrays are unhashable "
+                    f"and must be traced, not static",
+                ))
+
+    # call sites in this module passing unhashable literals to a static
+    # keyword of a locally-jitted function
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = dotted_name(node.func)
+        statics = jitted.get(callee or "")
+        if not statics:
+            continue
+        for kw in node.keywords:
+            if kw.arg in statics and isinstance(
+                kw.value, _UNHASHABLE_LITERALS
+            ):
+                findings.append(Finding(
+                    path, kw.value.lineno, "jit-static-unhashable",
+                    f"unhashable literal passed to static parameter "
+                    f"{kw.arg!r} of {callee}() — jit raises at call "
+                    f"time",
+                ))
+
+
+# --------------------------------------------------------------------------
+# router-geometry
+# --------------------------------------------------------------------------
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """``self.x`` (or the ``self.x`` root of ``self.x.y``) -> ``"x"``."""
+    while isinstance(node, ast.Attribute):
+        if isinstance(node.value, ast.Name) and node.value.id == "self":
+            return node.attr
+        node = node.value
+    return None
+
+
+def _calls_named(tree: ast.AST, name: str) -> list[ast.Call]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.Call)
+            and (dotted_name(n.func) or "").split(".")[-1] == name]
+
+
+def router_geometry_summary(cls: ast.ClassDef) -> Optional[dict]:
+    """Prove (or refute) the single-compiled-geometry property for a
+    class that launches ``greedy_chunk_slots``.
+
+    Returns None when the class has no launch site.  Otherwise a dict:
+    ``launch_sites`` (count), ``geometry_attrs`` (write-once, from
+    ``__init__``), ``lazy_attrs`` (write-once under ``is None`` guard),
+    ``violations`` ([(line, message)]), and ``reachable_geometries``
+    (1 when no violations — the static fig8 counterpart).
+    """
+    launches = _calls_named(cls, CHUNK_LAUNCH)
+    if not launches:
+        return None
+    inits = _calls_named(cls, STATE_INIT)
+
+    violations: list[tuple[int, str]] = []
+    if len(launches) > 1:
+        for call in launches[1:]:
+            violations.append((
+                call.lineno,
+                f"{len(launches)} {CHUNK_LAUNCH} launch sites in class "
+                f"{cls.name} — a second site can carry a second "
+                f"compiled geometry; route every chunk through one",
+            ))
+
+    geometry: set[str] = set()  # write-once-in-__init__ attrs
+    lazy: set[str] = set()  # write-once-under-guard attrs
+    for call in launches:
+        for arg in call.args + [kw.value for kw in call.keywords]:
+            attr = _self_attr(arg)
+            if attr is not None and not attr.startswith("_"):
+                geometry.add(attr)
+            # underscore launch args are the mutable slot state — their
+            # shapes are pinned by the STATE_INIT arguments below
+    for call in inits:
+        for arg in call.args + [kw.value for kw in call.keywords]:
+            attr = _self_attr(arg)
+            if attr is None:
+                continue
+            (lazy if attr.startswith("_") else geometry).add(attr)
+
+    writes = _attr_writes(cls)
+    for attr in sorted(geometry):
+        for line, where, guarded_by in writes.get(attr, []):
+            if where != "__init__":
+                violations.append((
+                    line,
+                    f"geometry attribute self.{attr} written outside "
+                    f"__init__ (in {where}) — the compiled chunk "
+                    f"signature could change after warmup",
+                ))
+    for attr in sorted(lazy):
+        for line, where, guarded_by in writes.get(attr, []):
+            if where != "__init__" and attr not in guarded_by:
+                violations.append((
+                    line,
+                    f"lazy geometry attribute self.{attr} written in "
+                    f"{where} outside its `if self.{attr} is None:` "
+                    f"guard — it must materialise exactly once",
+                ))
+
+    return {
+        "class": cls.name,
+        "launch_sites": len(launches),
+        "geometry_attrs": sorted(geometry),
+        "lazy_attrs": sorted(lazy),
+        "violations": violations,
+        "reachable_geometries": 1 if not violations else None,
+    }
+
+
+def _attr_writes(
+    cls: ast.ClassDef,
+) -> dict[str, list[tuple[int, str, frozenset[str]]]]:
+    """All ``self.x = ...`` writes in the class:
+    attr -> [(line, method name, attrs guarded by `is None` here)]."""
+    writes: dict[str, list[tuple[int, str, frozenset[str]]]] = {}
+
+    def guard_attrs(test: ast.AST) -> set[str]:
+        """Attrs ``a`` with ``self.a is None`` asserted by ``test``."""
+        out: set[str] = set()
+        if isinstance(test, ast.BoolOp) and isinstance(test.op, ast.And):
+            for v in test.values:
+                out |= guard_attrs(v)
+        elif (isinstance(test, ast.Compare) and len(test.ops) == 1
+                and isinstance(test.ops[0], ast.Is)
+                and isinstance(test.comparators[0], ast.Constant)
+                and test.comparators[0].value is None):
+            attr = _self_attr(test.left)
+            if attr is not None:
+                out.add(attr)
+        return out
+
+    def scan(stmts: list[ast.stmt], method: str,
+             guarded: frozenset[str]) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scan(st.body, method, guarded)
+                continue
+            targets: list[ast.AST] = []
+            if isinstance(st, ast.Assign):
+                targets = st.targets
+            elif isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+                targets = [st.target]
+            for target in targets:
+                for t in (target.elts if isinstance(
+                        target, (ast.Tuple, ast.List)) else [target]):
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        writes.setdefault(t.attr, []).append(
+                            (st.lineno, method, guarded)
+                        )
+            if isinstance(st, ast.If):
+                scan(st.body, method,
+                     guarded | frozenset(guard_attrs(st.test)))
+                scan(st.orelse, method, guarded)
+            elif isinstance(st, (ast.While, ast.For)):
+                scan(st.body, method, guarded)
+                scan(st.orelse, method, guarded)
+            elif isinstance(st, ast.With):
+                scan(st.body, method, guarded)
+            elif isinstance(st, ast.Try):
+                scan(st.body, method, guarded)
+                for handler in st.handlers:
+                    scan(handler.body, method, guarded)
+                scan(st.orelse, method, guarded)
+                scan(st.finalbody, method, guarded)
+
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scan(node.body, node.name, frozenset())
+    return writes

@@ -1,0 +1,312 @@
+"""AST trace-safety lint (rules trace-cast, trace-pyif, host-sync-hot,
+obs-nonstatic, dead-shim).
+
+Scopes considered *traced*: functions recognised as jitted by
+``astutil.jit_statics`` / module-level ``jax.jit(fn, ...)`` bindings,
+Pallas kernel bodies (``*_ref`` parameters), and functions nested
+inside either (their parameters are traced carry values).  Inside a
+traced scope, names proven host-valued by :class:`astutil.StaticNames`
+(statics, shapes, ``is None`` checks ...) are exempt; everything else
+is presumed traced.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import (
+    TracedNames,
+    _target_names,
+    dotted_name,
+    is_kernel_fn,
+    jit_call_assignments,
+    jit_statics,
+    param_names,
+)
+from repro.analysis.findings import Finding
+
+# --- dead-shim registry (PR-6 serving surface, removed this release) ---
+REMOVED_IMPORTS: dict[str, frozenset[str]] = {
+    "repro.serving": frozenset({
+        "rerank", "rerank_batch", "rerank_stream",
+        "sharded_rerank", "sharded_rerank_stream",
+    }),
+    "repro.serving.reranker": frozenset({
+        "rerank", "rerank_batch", "rerank_stream", "_deprecated",
+    }),
+    "repro.serving.sharded_rerank": frozenset({
+        "sharded_rerank", "sharded_rerank_stream",
+    }),
+}
+# attribute form: `import repro.serving as serving; serving.rerank(...)`
+_REMOVED_DOTTED = frozenset(
+    f"{prefix}.{name}"
+    for prefix in ("serving", "repro.serving")
+    for name in REMOVED_IMPORTS["repro.serving"]
+)
+
+_HOST_SYNC_FUNCS = frozenset({
+    "np.asarray", "numpy.asarray", "np.array", "numpy.array",
+    "jax.device_get", "jax.block_until_ready",
+})
+_HOST_SYNC_ATTRS = frozenset({"block_until_ready", "item", "tolist"})
+# pump phases that exist to pay the sync cost, by span-name suffix
+_SYNC_SPAN_SUFFIXES = (".sync", ".materialize")
+
+_DEVICE_PREFIXES = ("jnp.", "jax.", "np.", "numpy.")
+
+
+def check_module(path: str, tree: ast.Module) -> list[Finding]:
+    findings: list[Finding] = []
+    _check_dead_shims(path, tree, findings)
+    _check_obs_callsites(path, tree, findings)
+
+    jit_assigned = {name: statics for name, statics, _ in
+                    jit_call_assignments(tree)}
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        statics = jit_statics(node)
+        if statics is None and node.name in jit_assigned:
+            statics = jit_assigned[node.name]
+        kernel = is_kernel_fn(node)
+        if statics is None and not kernel:
+            continue
+        if kernel:
+            # the *_ref Refs are the traced operands; scalar params
+            # (bound via functools.partial) are static
+            traced = {a for a in param_names(node) if a.endswith("_ref")}
+        else:
+            traced = param_names(node) - set(statics)
+        _scan_traced_scope(path, node, traced, findings)
+
+    for node in ast.walk(tree):
+        if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node.name == "pump"):
+            _check_pump_syncs(path, node, findings)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# trace-cast / trace-pyif
+# --------------------------------------------------------------------------
+
+
+def _scan_traced_scope(
+    path: str, fn: ast.FunctionDef, traced: set[str],
+    findings: list[Finding],
+) -> None:
+    sn = TracedNames(traced)
+
+    def check_casts(node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            callee = dotted_name(sub.func)
+            if (callee in ("float", "int", "bool")
+                    and len(sub.args) == 1 and not sub.keywords
+                    and sn.is_traced(sub.args[0])):
+                findings.append(Finding(
+                    path, sub.lineno, "trace-cast",
+                    f"{callee}() on a traced value inside traced scope "
+                    f"{fn.name!r} — concretizes the tracer (use jnp "
+                    f"ops, or hoist to the host side)",
+                ))
+            elif (isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr in ("item", "tolist")
+                    and not sub.args
+                    and sn.is_traced(sub.func.value)):
+                findings.append(Finding(
+                    path, sub.lineno, "trace-cast",
+                    f".{sub.func.attr}() on a traced value inside "
+                    f"traced scope {fn.name!r}",
+                ))
+
+    def scan(stmts: list[ast.stmt]) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested def: a traced closure — its params receive
+                # traced carry values, its free vars keep their taint
+                for dec in st.decorator_list:
+                    check_casts(dec)
+                _scan_traced_scope(
+                    path, st, set(sn.names) | param_names(st), findings
+                )
+                continue
+            if isinstance(st, ast.ClassDef):
+                continue
+            if isinstance(st, (ast.If, ast.While)):
+                check_casts(st.test)
+                if sn.is_traced(st.test):
+                    findings.append(Finding(
+                        path, st.lineno, "trace-pyif",
+                        f"Python `{'if' if isinstance(st, ast.If) else 'while'}`"
+                        f" on a traced value inside traced scope "
+                        f"{fn.name!r} — use lax.cond/jnp.where",
+                    ))
+                scan(st.body)
+                scan(st.orelse)
+            elif isinstance(st, ast.For):
+                check_casts(st.iter)
+                if sn.is_traced(st.iter):
+                    for name in _target_names(st.target):
+                        sn.names.add(name)
+                scan(st.body)
+                scan(st.orelse)
+            elif isinstance(st, ast.With):
+                for item in st.items:
+                    check_casts(item.context_expr)
+                scan(st.body)
+            elif isinstance(st, ast.Try):
+                scan(st.body)
+                for handler in st.handlers:
+                    scan(handler.body)
+                scan(st.orelse)
+                scan(st.finalbody)
+            else:
+                check_casts(st)
+                sn.observe_assign(st)
+
+    scan(fn.body)
+
+
+# --------------------------------------------------------------------------
+# host-sync-hot
+# --------------------------------------------------------------------------
+
+
+def _is_sync_call(node: ast.Call) -> bool:
+    callee = dotted_name(node.func)
+    if callee in _HOST_SYNC_FUNCS:
+        return True
+    return (isinstance(node.func, ast.Attribute)
+            and node.func.attr in _HOST_SYNC_ATTRS)
+
+
+def _span_name(item: ast.withitem) -> str | None:
+    ctx = item.context_expr
+    if (isinstance(ctx, ast.Call) and isinstance(ctx.func, ast.Attribute)
+            and ctx.func.attr == "span" and ctx.args
+            and isinstance(ctx.args[0], ast.Constant)
+            and isinstance(ctx.args[0].value, str)):
+        return ctx.args[0].value
+    return None
+
+
+def _check_pump_syncs(
+    path: str, fn: ast.FunctionDef, findings: list[Finding]
+) -> None:
+    """Inside a router ``pump()`` the only phases allowed to touch the
+    host are the designated ``*.sync`` / ``*.materialize`` spans — a
+    stray ``np.asarray``/``block_until_ready`` anywhere else serializes
+    the double-buffered pipeline."""
+
+    def scan_flat(stmts: list[ast.stmt], allowed: bool) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue
+            if isinstance(st, ast.With):
+                inner = allowed
+                for item in st.items:
+                    name = _span_name(item)
+                    if name and name.endswith(_SYNC_SPAN_SUFFIXES):
+                        inner = True
+                    if not allowed:
+                        _flag_syncs(item.context_expr)
+                scan_flat(st.body, inner)
+            elif isinstance(st, (ast.If, ast.While)):
+                if not allowed:
+                    _flag_syncs(st.test)
+                scan_flat(st.body, allowed)
+                scan_flat(st.orelse, allowed)
+            elif isinstance(st, ast.For):
+                if not allowed:
+                    _flag_syncs(st.iter)
+                scan_flat(st.body, allowed)
+                scan_flat(st.orelse, allowed)
+            elif isinstance(st, ast.Try):
+                scan_flat(st.body, allowed)
+                for handler in st.handlers:
+                    scan_flat(handler.body, allowed)
+                scan_flat(st.orelse, allowed)
+                scan_flat(st.finalbody, allowed)
+            elif not allowed:
+                _flag_syncs(st)
+
+    def _flag_syncs(node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and _is_sync_call(sub):
+                findings.append(Finding(
+                    path, sub.lineno, "host-sync-hot",
+                    "host sync in pump() outside a *.sync/"
+                    "*.materialize span — serializes the "
+                    "double-buffered pump",
+                ))
+
+    scan_flat(fn.body, False)
+
+
+# --------------------------------------------------------------------------
+# obs-nonstatic
+# --------------------------------------------------------------------------
+
+
+def _check_obs_callsites(
+    path: str, tree: ast.Module, findings: list[Finding]
+) -> None:
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "span"):
+            continue
+        owner = dotted_name(node.func.value) or ""
+        if "obs" not in owner.split("."):
+            continue
+        for value in list(node.args) + [kw.value for kw in node.keywords]:
+            for sub in ast.walk(value):
+                if not isinstance(sub, ast.Call):
+                    continue
+                callee = dotted_name(sub.func) or ""
+                device = callee.startswith(_DEVICE_PREFIXES) or (
+                    isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr in _HOST_SYNC_ATTRS
+                )
+                if device:
+                    findings.append(Finding(
+                        path, sub.lineno, "obs-nonstatic",
+                        f"device work ({callee or sub.func.attr}) in an "
+                        f"obs.span(...) argument — hook arguments run "
+                        f"even when tracing is off; pass host scalars",
+                    ))
+
+
+# --------------------------------------------------------------------------
+# dead-shim
+# --------------------------------------------------------------------------
+
+
+def _check_dead_shims(
+    path: str, tree: ast.Module, findings: list[Finding]
+) -> None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            removed = REMOVED_IMPORTS.get(node.module)
+            if not removed:
+                continue
+            for alias in node.names:
+                if alias.name in removed:
+                    findings.append(Finding(
+                        path, node.lineno, "dead-shim",
+                        f"{alias.name!r} was removed from "
+                        f"{node.module} (PR-6 deprecation grace period "
+                        f"ended) — use Reranker/RerankRequest from "
+                        f"repro.serving.api",
+                    ))
+        elif isinstance(node, ast.Attribute):
+            dotted = dotted_name(node)
+            if dotted in _REMOVED_DOTTED:
+                findings.append(Finding(
+                    path, node.lineno, "dead-shim",
+                    f"{dotted} no longer exists — use Reranker/"
+                    f"RerankRequest from repro.serving.api",
+                ))

@@ -127,7 +127,10 @@ def _stream_tile(D: int, M: int, state_rows: int, windowed: bool,
     if tile_m is not None and tile_policy is not None:
         raise ValueError("pass at most one of tile_m= or tile_policy=")
     policy = tile_policy or TilePolicy(tile_m=tile_m)
-    mode, tm = policy.decide(D, M, state_rows, windowed)
+    # chunked=True: the fused chunk kernels stream the full Cholesky
+    # block back out every step, so their per-tile working set is wider
+    # than the per-step sweep the default model describes.
+    mode, tm = policy.decide(D, M, state_rows, windowed, chunked=True)
     if mode == "jnp":
         raise ValueError(
             "pathological shape: even one lane-width tile exceeds the VMEM "
@@ -168,7 +171,8 @@ def dpp_greedy_stream_init(
     tile, Mp = _stream_tile(D, M, R, windowed, tile_m, tile_policy)
     record_kernel_dispatch(
         "fused_chunk", D=D, M=M, state_rows=R, windowed=windowed,
-        tile_m=tile, vmem_bytes=tile_vmem_bytes(D, tile, R, windowed),
+        tile_m=tile,
+        vmem_bytes=tile_vmem_bytes(D, tile, R, windowed, chunked=True),
     )
     if mask is None:
         mask = jnp.ones((B, M), bool)

@@ -599,6 +599,28 @@ def _ccell_spec(rows, cols):
     return pl.BlockSpec((None, rows, cols), lambda b, s, i: (b, 0, 0))
 
 
+def _require_interpret_for_multitile(interpret: bool, nt: int) -> None:
+    """The fused chunk kernels carry C/d2 across greedy steps in
+    *revisited output blocks*: tile block ``i`` is written at grid step
+    ``(b, s, i)`` and read again at ``(b, s+1, i)`` with the ``nt - 1``
+    other tiles visited in between.  Pallas interpret mode keeps every
+    output block live for the whole grid, so the pattern is exact there;
+    compiled Mosaic only guarantees a revisited block's contents when
+    the revisits are *consecutive* grid steps, which holds only for
+    ``nt == 1``.  Until the multi-tile schedule is validated on real
+    hardware (ROADMAP: compiled-mode fused chunks), compiling it is an
+    error rather than silent wrong slates.  ``repro.analysis``'s
+    pallas-revisit-gap rule probes this guard."""
+    if not interpret and nt > 1:
+        raise NotImplementedError(
+            f"fused chunk kernels compile only with a single whole-M tile "
+            f"(nt={nt} tiles requested): cross-step state lives in output "
+            f"blocks revisited non-consecutively, which compiled Mosaic "
+            f"does not guarantee — use interpret=True, widen tile_m to "
+            f"cover M, or step with the per-step tiled kernels"
+        )
+
+
 def _fused_chunk_call(kernel, *, grid, in_specs, out_specs, out_shape,
                       interpret, ins):
     """The single ``pallas_call`` a fused chunk makes.  Kept as a named
@@ -649,6 +671,7 @@ def fused_chunk_exact(V, C, d2, t0, stopped, *, chunk: int, eps: float,
     B, D, Mp = V.shape
     R = C.shape[1]
     nt = Mp // tile_m
+    _require_interpret_for_multitile(interpret, nt)
     j0 = jnp.argmax(d2, axis=1).astype(jnp.int32)
     dj20 = jnp.take_along_axis(d2, j0[:, None], axis=1)[:, 0]
     vj0 = jnp.take_along_axis(V, j0[:, None, None], axis=2)[:, :, 0][:, None, :]
@@ -709,6 +732,7 @@ def fused_chunk_windowed(V, C, d2, win, t0, stopped, *, chunk: int,
     """
     B, D, Mp = V.shape
     nt = Mp // tile_m
+    _require_interpret_for_multitile(interpret, nt)
     j0 = jnp.argmax(d2, axis=1).astype(jnp.int32)
     dj20 = jnp.take_along_axis(d2, j0[:, None], axis=1)[:, 0]
     vj0 = jnp.take_along_axis(V, j0[:, None, None], axis=2)[:, :, 0][:, None, :]

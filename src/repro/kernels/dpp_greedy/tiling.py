@@ -71,22 +71,30 @@ def untiled_vmem_bytes(D: int, M: int, state_rows: int) -> int:
 
 
 def tile_vmem_bytes(
-    D: int, tile_m: int, state_rows: int, windowed: bool = False
+    D: int, tile_m: int, state_rows: int, windowed: bool = False,
+    chunked: bool = False,
 ) -> int:
     """Per-grid-step VMEM working set of the tiled streaming kernels.
 
     Counts the double-buffered streams (x2: while tile ``i`` computes,
     the pipeline prefetches tile ``i+1`` and drains tile ``i-1``):
     the ``V`` tile (D, tile_m), the Cholesky tile in (state_rows,
-    tile_m), the written-back tile (the full (state_rows, tile_m)
-    post-eviction state when ``windowed``, a single appended row
-    otherwise) and the d2 tile in/out; plus the small per-step
-    replicated state (winner column, rotation coefficients, reduction
-    cells), which does not scale with ``tile_m``.
+    tile_m), the written-back tile and the d2 tile in/out; plus the
+    small per-step replicated state (winner column, rotation
+    coefficients, reduction cells), which does not scale with
+    ``tile_m``.
+
+    The written-back tile is a single appended row for the per-step
+    exact sweep, but the **full** (state_rows, tile_m) state when
+    ``windowed`` (post-eviction rewrite) *or* ``chunked`` (the fused
+    multi-step chunk kernels stream the whole Cholesky block back out
+    every step — see ``fused_chunk_exact``'s first out_spec).  The
+    ``repro.analysis`` pallas-vmem-model rule cross-checks this count
+    against the BlockSpecs the kernels actually declare.
     """
     Dp = round_up(D, SUBLANE)
     Rp = round_up(state_rows, SUBLANE)
-    out_rows = Rp if windowed else SUBLANE
+    out_rows = Rp if (windowed or chunked) else SUBLANE
     streamed = Dp + Rp + out_rows + 2 * SUBLANE
     small = 4 * (Dp + Rp + 4 * LANE)
     return 4 * 2 * streamed * tile_m + small
@@ -118,26 +126,39 @@ class TilePolicy:
                 f"{self.vmem_budget_bytes}"
             )
 
-    def auto_tile(self, D: int, state_rows: int, windowed: bool) -> int:
+    def auto_tile(
+        self, D: int, state_rows: int, windowed: bool,
+        chunked: bool = False,
+    ) -> int:
         """Widest LANE-multiple tile whose working set fits the budget
         (0 when even one lane-width tile does not fit)."""
-        lo = tile_vmem_bytes(D, LANE, state_rows, windowed)
+        lo = tile_vmem_bytes(D, LANE, state_rows, windowed, chunked)
         if lo > self.vmem_budget_bytes:
             return 0
-        per_lane = tile_vmem_bytes(D, 2 * LANE, state_rows, windowed) - lo
+        per_lane = (
+            tile_vmem_bytes(D, 2 * LANE, state_rows, windowed, chunked) - lo
+        )
         spare = self.vmem_budget_bytes - lo
         tm = LANE * (1 + spare // max(per_lane, 1))
         return min(tm, MAX_AUTO_TILE)
 
     def decide(
-        self, D: int, M: int, state_rows: int, windowed: bool
+        self, D: int, M: int, state_rows: int, windowed: bool,
+        chunked: bool = False,
     ) -> tuple[str, Optional[int]]:
-        """-> ("resident", None) | ("tiled", tile_m) | ("jnp", None)."""
+        """-> ("resident", None) | ("tiled", tile_m) | ("jnp", None).
+
+        ``chunked`` must be set when the tile will feed the fused
+        multi-step chunk kernels, whose per-tile working set is larger
+        than the per-step exact sweep's (full state streams back out
+        every step) — sizing a chunked tile with the per-step model
+        overflows the budget by ``~8 * state_rows * tile_m`` bytes.
+        """
         if self.tile_m is not None:
             return "tiled", self.tile_m
         if untiled_vmem_bytes(D, M, state_rows) <= self.vmem_budget_bytes:
             return "resident", None
-        tm = self.auto_tile(D, state_rows, windowed)
+        tm = self.auto_tile(D, state_rows, windowed, chunked)
         if tm == 0:
             return "jnp", None
         return "tiled", min(tm, round_up(M, LANE))

@@ -1,27 +1,22 @@
 """DPP rerank serving.
 
-New code goes through the session API: ``Reranker(cfg)`` +
+Everything goes through the session API: ``Reranker(cfg)`` +
 ``RerankRequest`` (``repro.serving.api``) and, for continuous batching,
-``RerankRouter`` (``repro.serving.router``).  The function-per-shape
-surface (``rerank`` / ``rerank_batch`` / ``rerank_stream`` /
-``sharded_rerank`` / ``sharded_rerank_stream``) survives one release as
-``DeprecationWarning`` shims.
+``RerankRouter`` (``repro.serving.router``).  The PR-6
+function-per-shape surface (``rerank`` / ``rerank_batch`` /
+``rerank_stream`` / ``sharded_rerank`` / ``sharded_rerank_stream``)
+served its one-release ``DeprecationWarning`` grace period and is gone
+(removal pinned by ``tests/test_api.py::test_legacy_shims_are_removed``).
 """
 from repro.obs import ObsConfig
 from repro.serving.api import Reranker, RerankRequest
-from repro.serving.reranker import (
-    DPPRerankConfig,
-    rerank,
-    rerank_batch,
-    rerank_stream,
-)
+from repro.serving.reranker import DPPRerankConfig
 from repro.serving.router import (
     RerankRouter,
     RouterConfig,
     RouterStats,
     SlateHandle,
 )
-from repro.serving.sharded_rerank import sharded_rerank, sharded_rerank_stream
 
 __all__ = [
     "DPPRerankConfig",
@@ -32,9 +27,4 @@ __all__ = [
     "RouterConfig",
     "RouterStats",
     "SlateHandle",
-    "rerank",
-    "rerank_batch",
-    "rerank_stream",
-    "sharded_rerank",
-    "sharded_rerank_stream",
 ]

@@ -33,8 +33,8 @@ once, O(M) — and each generator resume does only O(chunk) host-side
 work (the previous serving generator re-entered validation per resume
 and deferred the shortlist to the first ``next()``).
 
-The legacy functions remain as thin shims that emit a
-``DeprecationWarning`` and delegate here — one release, then they go.
+The legacy functions survived one release as ``DeprecationWarning``
+shims and are now removed — this module is the only serving surface.
 """
 from __future__ import annotations
 
@@ -283,8 +283,8 @@ class Reranker:
 
 
 # ---------------------------------------------------------------------------
-# Implementation bodies (the legacy functions shim onto these through
-# Reranker; keeping them module-level keeps the jit caches shared)
+# Implementation bodies (module-level so every Reranker session shares
+# the same jit caches)
 # ---------------------------------------------------------------------------
 
 
@@ -292,7 +292,8 @@ def _rerank_impl(scores, feats, cfg, mask):
     if jnp.ndim(scores) != 1:
         raise ValueError(
             f"rerank takes a single request (scores (M,)), got "
-            f"ndim={jnp.ndim(scores)}; use rerank_batch for user batches"
+            f"ndim={jnp.ndim(scores)}; batched scores dispatch through "
+            f"Reranker.rerank"
         )
     V, m_top, top_i = _shortlist_kernel(scores, feats, cfg, mask)
     res = greedy_map(cfg.greedy_spec(), V=V, mask=m_top)

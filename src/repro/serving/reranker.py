@@ -21,41 +21,42 @@ All greedy variants are reached through ``repro.core.greedy_map``:
   device mesh and delegates to ``repro.serving.sharded_rerank`` —
   slates drawn from a candidate set far larger than a single device
   holds, with a sharded top-k shortlist instead of ``jax.lax.top_k``.
-  ``rerank_batch`` keeps the candidate axis sharded and runs the whole
-  request batch of B users on the mesh at once (batched shortlist,
-  batched greedy loop state, one batched collective per step).
+  A batched request (scores ``(B, M)``) keeps the candidate axis
+  sharded and runs the whole user batch on the mesh at once (batched
+  shortlist, batched greedy loop state, one batched collective per
+  step).
 * ``mask=`` excludes candidates (already-seen / business-filtered
   items) before the shortlist and inside greedy selection; a masked
   item can never appear in the slate.
-* ``rerank_stream`` emits the slate **incrementally**: a generator
+* ``Reranker.stream`` emits the slate **incrementally**: a generator
   yielding ``chunk_size``-item chunks (global ids + per-chunk d_hist)
   as the greedy loop produces them, instead of blocking until the
   whole slate is selected — the serving shape the paper's windowed
   variant exists for (repulsion only among nearby items means a long
   feed can start rendering after the first chunk).  Chunks concatenate
-  exactly to ``rerank``'s whole-slate result on every backend; with
-  ``mesh=`` the chunked state stays device-resident between chunks
-  (``repro.serving.sharded_rerank.sharded_rerank_stream``).
+  exactly to the whole-slate result on every backend; with ``mesh=``
+  the chunked state stays device-resident between chunks.
 
 ``DPPRerankConfig`` validates itself at construction (mirroring
 ``GreedySpec``): a nonsensical slate/shortlist/window/eps raises a
 ``ValueError`` when the config is built, not as a shape or trace error
 deep inside the jitted serve step.
 
-**Deprecation.** The function-per-shape surface this module grew
+**History.** The function-per-shape surface this module grew
 (``rerank`` / ``rerank_batch`` / ``rerank_stream``, plus the sharded
-twins in ``repro.serving.sharded_rerank``) is superseded by the
+twins in ``repro.serving.sharded_rerank``) was superseded by the
 session API in ``repro.serving.api`` — ``Reranker(cfg)`` with
 ``.rerank`` / ``.stream`` / ``.submit`` dispatching on the config and
-the request shape.  The functions below survive one release as thin
-shims that emit a ``DeprecationWarning`` and delegate; new code (and
-the continuous-batching router, which is the new API's first client)
-should construct a ``Reranker``.
+the request shape.  The functions survived one release as
+``DeprecationWarning`` shims and are now **removed** (pinned by
+``tests/test_api.py::test_legacy_shims_are_removed``; the
+``dead-shim`` rule of ``repro.analysis`` flags any straggler import).
+This module keeps only the model-side config and the shortlist/kernel
+builder the session API dispatches through.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
 import jax
@@ -90,7 +91,7 @@ class DPPRerankConfig:
     axis_name: str = "data"  # mesh axis carrying the candidate shards
     tile_m: Optional[int] = None  # Pallas candidate-axis tile (None = auto)
     interpret: bool = True  # Pallas interpret mode (False on real TPU)
-    chunk_size: Optional[int] = None  # rerank_stream emission granularity
+    chunk_size: Optional[int] = None  # Reranker.stream emission granularity
     obs: Optional[ObsConfig] = None  # observability (installed by Reranker)
 
     def __post_init__(self):
@@ -140,52 +141,16 @@ class DPPRerankConfig:
             interpret=self.interpret,
             # the jnp spec cannot carry a chunk size (its whole-slate
             # path would silently ignore it — GreedySpec rejects that);
-            # rerank_stream passes it to greedy_map_chunks directly
+            # Reranker.stream passes it to the chunk executor directly
             chunk_size=self.chunk_size if backend != "jnp" else None,
         )
 
 
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"repro.serving.{old} is deprecated and will be removed next "
-        f"release; use {new} (see repro.serving.api)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def rerank(
-    scores: jnp.ndarray,
-    feats: jnp.ndarray,
-    cfg: DPPRerankConfig,
-    mask: Optional[jnp.ndarray] = None,
-):
-    """Deprecated shim — use ``Reranker(cfg).rerank(RerankRequest(...))``.
-
-    scores (M,), feats (M, D) l2-normalized rows -> slate (N,) global
-    ids: (indices (N,) int32 into the original M, d_hist (N,)).
-    """
-    _deprecated("rerank(scores, feats, cfg)", "Reranker(cfg).rerank(req)")
-    from repro.serving.api import _rerank_impl, _sharded_rerank_impl
-
-    if cfg.mesh is not None:
-        from repro.serving.sharded_rerank import _sharded_kernel
-
-        # sharded serving also takes batches; rerank's contract stays
-        # single-request (batches go through rerank_batch)
-        if scores.ndim != 1:
-            raise ValueError(
-                f"rerank takes a single request (scores (M,)), got "
-                f"ndim={scores.ndim}; use rerank_batch for user batches"
-            )
-        return _sharded_rerank_impl(scores, feats, cfg, mask, _sharded_kernel)
-    return _rerank_impl(scores, feats, cfg, mask)
-
-
 def _shortlist_kernel(scores, feats, cfg, mask):
     """The top-C shortlist and its implicit DPP kernel — shared by the
-    whole-slate ``rerank`` and the chunk-emitting ``rerank_stream`` so
-    the two paths diversify the identical V.  Returns
+    whole-slate ``Reranker.rerank`` and the chunk-emitting
+    ``Reranker.stream`` so the two paths diversify the identical V.
+    Returns
     ``(V (D, C), shortlist mask or None, top_i (C,) global ids)``."""
     C = min(cfg.shortlist, scores.shape[0])
     s = scores if mask is None else jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
@@ -200,59 +165,3 @@ def _shortlist_kernel(scores, feats, cfg, mask):
         rel = jnp.where(m_top, rel, 0.0)
     V = (f * rel[:, None]).T  # (D, C)
     return V, m_top, top_i
-
-
-def rerank_stream(
-    scores: jnp.ndarray,
-    feats: jnp.ndarray,
-    cfg: DPPRerankConfig,
-    mask: Optional[jnp.ndarray] = None,
-    chunk_size: Optional[int] = None,
-):
-    """Deprecated shim — use ``Reranker(cfg).stream(RerankRequest(...))``.
-
-    Generator over ``ceil(slate_size / chunk)`` chunks, each a
-    ``(indices (c,) int32 global ids, d_hist (c,))`` pair; chunks
-    concatenate exactly to ``rerank``'s whole-slate result.
-    ``chunk_size`` overrides ``cfg.chunk_size``; one of them must be
-    set.  (The session ``stream`` additionally hoists validation, the
-    shortlist and the state build out of the generator — O(chunk)
-    per resume — which this shim inherits by delegating.)
-    """
-    _deprecated(
-        "rerank_stream(scores, feats, cfg)", "Reranker(cfg).stream(req)"
-    )
-    from repro.serving.api import Reranker, RerankRequest
-
-    return Reranker(cfg).stream(
-        RerankRequest(scores=scores, feats=feats, mask=mask),
-        chunk_size=chunk_size,
-    )
-
-
-def rerank_batch(
-    scores: jnp.ndarray,
-    feats: jnp.ndarray,
-    cfg: DPPRerankConfig,
-    mask: Optional[jnp.ndarray] = None,
-):
-    """Deprecated shim — use ``Reranker(cfg).rerank(RerankRequest(...))``
-    with batched ``scores (B, M)``.
-
-    scores (B, M), feats (B, M, D) or shared (M, D), mask (B, M),
-    shared (M,), or None -> (slates (B, N) int32 global ids,
-    d_hist (B, N)).
-    """
-    _deprecated(
-        "rerank_batch(scores, feats, cfg)", "Reranker(cfg).rerank(req)"
-    )
-    if scores.ndim != 2:
-        raise ValueError(
-            f"rerank_batch takes a user batch (scores (B, M)), got "
-            f"ndim={scores.ndim}; use rerank for a single request"
-        )
-    from repro.serving.api import Reranker, RerankRequest
-
-    return Reranker(cfg).rerank(
-        RerankRequest(scores=scores, feats=feats, mask=mask)
-    )

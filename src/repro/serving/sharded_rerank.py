@@ -1,8 +1,8 @@
 """Sharded candidate-axis DPP rerank — slates over millions of candidates.
 
-Same contract as ``repro.serving.reranker.rerank`` / ``rerank_batch``
-but the candidate axis M is sharded over ``cfg.mesh``'s
-``cfg.axis_name``:
+Same contract as the single-device ``Reranker.rerank`` dispatch but the
+candidate axis M is sharded over ``cfg.mesh``'s ``cfg.axis_name``
+(``Reranker`` routes here automatically when ``cfg.mesh`` is set):
 
 * the top-C shortlist is a **sharded top-k** (local top-k per shard,
   one small all-gather merge) that produces a selectable *mask* over
@@ -29,8 +29,8 @@ feeds are a ROADMAP item) — the O(M)-per-device scaling claim is about
 the per-step compute and device state, not host staging memory.
 
 The returned indices are global ids into the original M, identical to
-what the single-device ``rerank`` (or a ``vmap`` of it) would select on
-the same inputs (same argmax sequence; see ``repro.core.sharded``) —
+what the single-device ``Reranker.rerank`` (or a ``vmap`` of it) would
+select on the same inputs (same argmax sequence; see ``repro.core.sharded``) —
 up to argmax ties between *exactly* float-equal marginal gains of
 distinct items, where the single-device path breaks by score-sorted
 shortlist position and this path by lowest global index (measure-zero
@@ -38,48 +38,25 @@ on continuous scores).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax.numpy as jnp
 
 from repro.core.kernel_matrix import map_relevance
 from repro.core.sharded import sharded_topk
-from repro.serving.reranker import _deprecated
-
-
-def sharded_rerank(
-    scores: jnp.ndarray,
-    feats: jnp.ndarray,
-    cfg,
-    mask: Optional[jnp.ndarray] = None,
-):
-    """Deprecated shim — ``Reranker(cfg).rerank(RerankRequest(...))``
-    with ``cfg.mesh`` set dispatches here automatically.
-
-    scores (M,) or (B, M) -> (slate (N,)/(B, N) int32 global ids,
-    d_hist).  ``cfg`` is a ``DPPRerankConfig`` with ``mesh`` set;
-    ``feats`` is (M, D) — shared across the batch when scores are
-    (B, M) — or per-user (B, M, D); ``mask`` is (M,), (B, M), or a
-    shared (M,) filter broadcast over the batch.
-    """
-    _deprecated(
-        "sharded_rerank(scores, feats, cfg)", "Reranker(cfg).rerank(req)"
-    )
-    from repro.serving.api import _sharded_rerank_impl
-
-    return _sharded_rerank_impl(scores, feats, cfg, mask, _sharded_kernel)
 
 
 def _sharded_kernel(scores, feats, cfg, mask):
     """Sharded shortlist mask + scaled-feature kernel build — shared by
-    the whole-slate ``sharded_rerank`` and the chunk-emitting
-    ``sharded_rerank_stream`` so both diversify the identical V.
+    the whole-slate ``Reranker.rerank`` dispatch and the chunk-emitting
+    ``Reranker.stream`` / router admission paths so every consumer
+    diversifies the identical V.
     Returns ``(V (..., D, M), selectability mask or None)``."""
     if cfg.mesh is None:
-        raise ValueError("sharded_rerank needs cfg.mesh (see DPPRerankConfig)")
+        raise ValueError(
+            "the sharded rerank path needs cfg.mesh (see DPPRerankConfig)"
+        )
     if scores.ndim not in (1, 2):
         raise ValueError(
-            f"sharded_rerank takes scores (M,) or a user batch (B, M), "
+            f"sharded rerank takes scores (M,) or a user batch (B, M), "
             f"got ndim={scores.ndim}"
         )
     batched = scores.ndim == 2
@@ -123,29 +100,3 @@ def _sharded_kernel(scores, feats, cfg, mask):
         feats = feats[None]  # shared features broadcast over the batch
     V = jnp.swapaxes(feats * rel[..., None], -1, -2)  # (..., D, M)
     return V, smask
-
-
-def sharded_rerank_stream(
-    scores: jnp.ndarray,
-    feats: jnp.ndarray,
-    cfg,
-    mask: Optional[jnp.ndarray] = None,
-    chunk_size: Optional[int] = None,
-):
-    """Deprecated shim — ``Reranker(cfg).stream(RerankRequest(...))``
-    with ``cfg.mesh`` set dispatches to the sharded stream path.
-
-    Generator over ``(indices (c,) int32 global ids, d_hist (c,))``
-    pairs whose concatenation reproduces ``sharded_rerank`` exactly;
-    between chunks the greedy state stays sharded and device-resident.
-    """
-    _deprecated(
-        "sharded_rerank_stream(scores, feats, cfg)",
-        "Reranker(cfg).stream(req)",
-    )
-    from repro.serving.api import Reranker, RerankRequest
-
-    return Reranker(cfg).stream(
-        RerankRequest(scores=scores, feats=feats, mask=mask),
-        chunk_size=chunk_size,
-    )

@@ -56,6 +56,29 @@ def _obs_lane():
         obs.disable()
 
 
+def serve_rerank(scores, feats, cfg, mask=None):
+    """One-shot serving call through the session API — the test-suite
+    spelling of what the removed PR-6 ``rerank``/``rerank_batch`` shims
+    used to do (``Reranker`` dispatches on the request shape, so one
+    helper covers single requests, user batches, and ``cfg.mesh``)."""
+    from repro.serving.api import Reranker, RerankRequest
+
+    return Reranker(cfg).rerank(
+        RerankRequest(scores=scores, feats=feats, mask=mask)
+    )
+
+
+def serve_rerank_stream(scores, feats, cfg, mask=None, chunk_size=None):
+    """Chunked serving call through the session API (the removed
+    ``rerank_stream``/``sharded_rerank_stream`` shims' contract)."""
+    from repro.serving.api import Reranker, RerankRequest
+
+    return Reranker(cfg).stream(
+        RerankRequest(scores=scores, feats=feats, mask=mask),
+        chunk_size=chunk_size,
+    )
+
+
 def make_greedy_inputs(seed, B, D, M, alpha=2.0, dtype=jnp.float32):
     """Low-rank greedy inputs ``V`` with ``L = V^T V``.
 

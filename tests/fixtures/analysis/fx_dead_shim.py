@@ -1,0 +1,16 @@
+"""Seeded violations: dead-shim (removed PR-6 serving surface)."""
+from repro.serving import rerank  # LINE: dead-shim import
+from repro.serving.reranker import rerank_stream  # LINE: dead-shim import
+
+import repro.serving as serving
+
+
+def old_paths(scores, feats, cfg):
+    a = rerank(scores, feats, cfg)
+    b = rerank_stream(scores, feats, cfg)
+    c = serving.sharded_rerank(scores, feats, cfg)  # LINE: dead-shim attr
+    return a, b, c
+
+
+def new_path_is_fine():
+    from repro.serving.api import Reranker, RerankRequest  # noqa: F401

@@ -1,0 +1,18 @@
+"""Seeded violations: host-sync-hot (syncs in pump() hot phases)."""
+import numpy as np
+
+
+class LeakyRouter:
+    def pump(self):
+        with obs.span("router.pump"):  # noqa: F821 (parsed, not run)
+            flags = np.asarray(self.state.stopped)  # LINE: host-sync-hot
+        done = self.handle.block_until_ready()  # LINE: host-sync-hot
+        with obs.span("router.pump.sync"):  # noqa: F821
+            ok = np.asarray(self.state.stopped)  # allowed: *.sync span
+        with obs.span("router.pump.materialize"):  # noqa: F821
+            out = np.asarray(self.slate)  # allowed: *.materialize span
+        return flags, done, ok, out
+
+    def not_pump(self):
+        # syncs outside pump() are not this rule's business
+        return np.asarray(self.slate)

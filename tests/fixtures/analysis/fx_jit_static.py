@@ -1,0 +1,22 @@
+"""Seeded violations: jit-static-missing / jit-static-unhashable."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_sizes", "kk"))
+def bad_statics(x, chunk_sizes: jnp.ndarray, k: int = 4):
+    # "kk" -> jit-static-missing (typo of "k"); chunk_sizes annotated
+    # as an array -> jit-static-unhashable
+    return x * k
+
+
+def caller(x):
+    # unhashable literal into a static kw -> jit-static-unhashable
+    return bad_statics(x, chunk_sizes=[1, 2, 3])
+
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def good_statics(x, w: int):
+    return x[:, :w]

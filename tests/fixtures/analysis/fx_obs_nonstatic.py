@@ -1,0 +1,10 @@
+"""Seeded violations: obs-nonstatic (device work in obs hook args)."""
+import jax.numpy as jnp
+
+
+def emit(obs, x, n):
+    with obs.span("serving.chunk", total=jnp.sum(x)):  # LINE: obs-nonstatic
+        pass
+    obs.span("serving.flush", last=x.item())  # LINE: obs-nonstatic
+    with obs.span("serving.ok", count=n, width=int(n) * 2):
+        pass  # host scalars are fine

@@ -1,0 +1,51 @@
+"""Seeded violations: router-geometry (mutable compiled geometry)."""
+
+
+class WobblyRouter:
+    def __init__(self, spec, chunk):
+        self.spec = spec
+        self.chunk = chunk
+        self._state = None
+        self._V = None
+        self._D = None
+
+    def admit(self, feats):
+        self._D = feats.shape[0]  # LINE: router-geometry lazy unguarded
+        if self._state is None:
+            self._state = greedy_slots_init(  # noqa: F821
+                self.spec, 4, self._D, 64
+            )
+
+    def pump(self):
+        self.chunk = self.chunk + 1  # LINE: router-geometry write
+        return greedy_chunk_slots(  # noqa: F821
+            self.spec, self._state, self._V, self.chunk
+        )
+
+    def flush(self):
+        return greedy_chunk_slots(  # LINE: router-geometry 2nd launch
+            self.spec, self._state, self._V, self.chunk
+        )  # noqa: F821
+
+
+class SteadyRouter:
+    """Write-once geometry, one launch site: proves clean."""
+
+    def __init__(self, spec, chunk):
+        self.spec = spec
+        self.chunk = chunk
+        self._state = None
+        self._D = None
+
+    def admit(self, feats):
+        if self._D is None:
+            self._D = feats.shape[0]
+        if self._state is None:
+            self._state = greedy_slots_init(  # noqa: F821
+                self.spec, 4, self._D, 64
+            )
+
+    def pump(self, V):
+        return greedy_chunk_slots(  # noqa: F821
+            self.spec, self._state, V, self.chunk
+        )

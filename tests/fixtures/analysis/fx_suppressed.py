@@ -1,0 +1,17 @@
+"""Suppression semantics: valid suppression silences, typo is itself a
+finding (bad-suppression) and silences nothing."""
+import jax
+
+
+@jax.jit
+def tolerated(x):
+    if x > 0:  # repro: ignore[trace-pyif]
+        return x
+    return -x
+
+
+@jax.jit
+def typo_does_not_silence(x):
+    if x > 0:  # repro: ignore[trace-pyiff] LINE: bad-suppression
+        return x
+    return -x

@@ -1,0 +1,24 @@
+"""Seeded violations: trace-cast (concretizing casts in traced scopes)."""
+import functools
+
+import jax
+
+
+@jax.jit
+def cast_in_jit(x):
+    return float(x) + 1.0  # LINE: trace-cast float
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def item_in_jit(x, k):
+    return x.sum().item() + k  # LINE: trace-cast item
+
+
+def cast_in_kernel(x_ref, o_ref):
+    o_ref[0] = int(x_ref[0])  # LINE: trace-cast kernel
+
+
+@jax.jit
+def static_shape_is_fine(x):
+    # .shape / len() launder taint: no finding expected here
+    return x.reshape(len(x.shape), -1)

@@ -1,0 +1,27 @@
+"""Seeded violations: trace-pyif (Python control flow on tracers)."""
+import jax
+
+
+@jax.jit
+def branch_on_tracer(x):
+    if x > 0:  # LINE: trace-pyif if
+        return x
+    return -x
+
+
+@jax.jit
+def loop_on_tracer(x):
+    y = x * 2.0
+    while y < 10.0:  # LINE: trace-pyif while (taint flows via y)
+        y = y + 1.0
+    return y
+
+
+@jax.jit
+def host_branches_are_fine(x, mode=None):
+    # `is None` and shape comparisons are host checks — no finding
+    if mode is None:
+        return x
+    if x.shape[0] > 4:
+        return x[:4]
+    return x

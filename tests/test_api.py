@@ -1,31 +1,25 @@
 """The unified serving API (repro.serving.api): Reranker / RerankRequest
-dispatch, construction-time request validation, the legacy-shim
-deprecation contract, and the streaming prep hoist.
+dispatch, construction-time request validation, the streaming prep
+hoist, and the legacy-shim *removal* pin.
 
-The legacy functions (rerank / rerank_batch / rerank_stream /
-sharded_rerank / sharded_rerank_stream) survive one release as
-DeprecationWarning shims; every shim is asserted to (a) warn and
-(b) return bitwise the session API's result.  The older suites keep
-calling the shims directly — their continued passing is the shims'
-behavioural coverage.
+The PR-6 function-per-shape shims (rerank / rerank_batch /
+rerank_stream / sharded_rerank / sharded_rerank_stream) served their
+one-release DeprecationWarning grace period and are gone;
+``test_legacy_shims_are_removed`` pins that they never come back.
+Dispatch correctness is asserted against the module-level
+implementation bodies (``_rerank_impl`` & co.) and against per-request
+self-consistency — the same ground the shim-comparison tests used to
+stand on, minus the shims.
 """
-import warnings
+import dataclasses
 
 import numpy as np
 import pytest
 import jax.numpy as jnp
 
 from repro.distributed.context import make_mesh_compat
-from repro.serving import (
-    DPPRerankConfig,
-    Reranker,
-    RerankRequest,
-    rerank,
-    rerank_batch,
-    rerank_stream,
-    sharded_rerank,
-    sharded_rerank_stream,
-)
+from repro.serving import DPPRerankConfig, Reranker, RerankRequest
+from repro.serving.api import _rerank_impl
 
 
 def _problem(M, D=8, seed=0, batch=None):
@@ -80,32 +74,32 @@ def test_reranker_rejects_non_config():
 
 
 # ---------------------------------------------------------------------------
-# Dispatch parity: the session API serves what the old functions served
+# Dispatch parity: the session verbs agree with the implementation
+# bodies and with each other
 # ---------------------------------------------------------------------------
 
 
-def test_rerank_single_matches_legacy():
+def test_rerank_single_matches_impl():
     s, f = _problem(60, seed=1)
     m = jnp.asarray(np.arange(60) % 4 != 0)
     rr = Reranker(CFG)
     for mask in (None, m):
         new = rr.rerank(RerankRequest(scores=s, feats=f, mask=mask))
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            old = rerank(s, f, CFG, mask=mask)
-        np.testing.assert_array_equal(np.asarray(new[0]), np.asarray(old[0]))
-        np.testing.assert_array_equal(np.asarray(new[1]), np.asarray(old[1]))
+        ref = _rerank_impl(s, f, CFG, mask)
+        np.testing.assert_array_equal(np.asarray(new[0]), np.asarray(ref[0]))
+        np.testing.assert_array_equal(np.asarray(new[1]), np.asarray(ref[1]))
 
 
-def test_rerank_batched_dispatch_matches_legacy():
+def test_rerank_batched_dispatch_matches_per_user():
     s, f = _problem(50, seed=2, batch=3)
     rr = Reranker(CFG)
     new = rr.rerank(RerankRequest(scores=s, feats=f))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        old = rerank_batch(s, f, CFG)
-    np.testing.assert_array_equal(np.asarray(new[0]), np.asarray(old[0]))
     assert np.asarray(new[0]).shape == (3, CFG.slate_size)
+    for b in range(3):
+        one = rr.rerank(RerankRequest(scores=s[b], feats=f[b]))
+        np.testing.assert_array_equal(
+            np.asarray(new[0][b]), np.asarray(one[0])
+        )
 
 
 def test_request_side_overrides():
@@ -118,13 +112,9 @@ def test_request_side_overrides():
     exp, _ = rr.rerank(
         RerankRequest(scores=s, feats=f, slate_size=4, shortlist=16)
     )
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        import dataclasses
-
-        old, _ = rerank(
-            s, f, dataclasses.replace(CFG, slate_size=4, shortlist=16)
-        )
+    old, _ = Reranker(
+        dataclasses.replace(CFG, slate_size=4, shortlist=16)
+    ).rerank(RerankRequest(scores=s, feats=f))
     np.testing.assert_array_equal(np.asarray(exp), np.asarray(old))
     assert rr.cfg.slate_size == 8 and rr.cfg.shortlist == 32
 
@@ -175,10 +165,13 @@ def test_sharded_dispatch_one_device():
     s, f = _problem(48, seed=7)
     rr = Reranker(cfg)
     new = rr.rerank(RerankRequest(scores=s, feats=f))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        old = sharded_rerank(s, f, cfg)
-    np.testing.assert_array_equal(np.asarray(new[0]), np.asarray(old[0]))
+    # on a 1-device mesh the sharded path must select the same global
+    # ids as the dense single-device dispatch (continuous scores — the
+    # documented tie-break divergence is measure-zero)
+    dense = Reranker(dataclasses.replace(cfg, mesh=None)).rerank(
+        RerankRequest(scores=s, feats=f)
+    )
+    np.testing.assert_array_equal(np.asarray(new[0]), np.asarray(dense[0]))
     streamed = np.concatenate(
         [np.asarray(i) for i, _ in rr.stream(RerankRequest(scores=s, feats=f))]
     )
@@ -186,38 +179,42 @@ def test_sharded_dispatch_one_device():
 
 
 # ---------------------------------------------------------------------------
-# The deprecation contract (ISSUE: shims covered by filterwarnings test)
+# The removal pin (ISSUE 8: the PR-6 shims' grace period has elapsed)
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.filterwarnings("error::DeprecationWarning")
-def test_every_legacy_entry_point_warns():
-    s, f = _problem(40, seed=8)
-    sb, fb = _problem(40, seed=8, batch=2)
-    mesh = make_mesh_compat((1,), ("data",))
-    mcfg = DPPRerankConfig(slate_size=4, shortlist=16, mesh=mesh,
-                           chunk_size=2)
-    with pytest.raises(DeprecationWarning):
-        rerank(s, f, CFG)
-    with pytest.raises(DeprecationWarning):
-        rerank_batch(sb, fb, CFG)
-    with pytest.raises(DeprecationWarning):
-        rerank_stream(s, f, CFG)
-    with pytest.raises(DeprecationWarning):
-        sharded_rerank(s, f, mcfg)
-    with pytest.raises(DeprecationWarning):
-        sharded_rerank_stream(s, f, mcfg)
+def test_legacy_shims_are_removed():
+    """The five PR-6 deprecation shims are gone from every module that
+    carried them — and stay gone.  Anything still importing one belongs
+    on the session API (``repro.analysis``'s dead-shim rule flags such
+    stragglers statically)."""
+    import inspect
 
+    import repro.serving as serving
+    import repro.serving.reranker as reranker
+    import repro.serving.sharded_rerank as sharded
 
-def test_legacy_shims_still_serve():
-    """The shims delegate, not just warn: results match the session API
-    and the stream shim still yields chunks."""
-    s, f = _problem(40, seed=9)
-    rr = Reranker(CFG)
-    exp = np.asarray(rr.rerank(RerankRequest(scores=s, feats=f))[0])
-    with pytest.warns(DeprecationWarning):
-        got = np.asarray(rerank(s, f, CFG)[0])
-    np.testing.assert_array_equal(got, exp)
-    with pytest.warns(DeprecationWarning):
-        chunks = [np.asarray(i) for i, _ in rerank_stream(s, f, CFG)]
-    np.testing.assert_array_equal(np.concatenate(chunks), exp)
+    for mod, names in (
+        (serving, ("rerank", "rerank_batch", "rerank_stream",
+                   "sharded_rerank", "sharded_rerank_stream")),
+        (reranker, ("rerank", "rerank_batch", "rerank_stream",
+                    "_deprecated")),
+        (sharded, ("sharded_rerank", "sharded_rerank_stream")),
+    ):
+        for name in names:
+            # importing repro.serving.sharded_rerank binds the
+            # *submodule* on the package under the same name the old
+            # function used — a module attribute is fine, a callable
+            # shim is the resurrection this test pins against
+            leftover = getattr(mod, name, None)
+            assert leftover is None or inspect.ismodule(leftover), (
+                f"{mod.__name__}.{name} was removed in PR 8 after its "
+                f"one-release deprecation window; use Reranker/"
+                f"RerankRequest instead of resurrecting it"
+            )
+    for name in ("rerank", "rerank_batch", "rerank_stream",
+                 "sharded_rerank", "sharded_rerank_stream"):
+        assert name not in serving.__all__
+    # the internal builders the session API dispatches through remain
+    assert hasattr(reranker, "_shortlist_kernel")
+    assert hasattr(sharded, "_sharded_kernel")

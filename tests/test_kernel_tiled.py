@@ -353,7 +353,8 @@ def test_greedy_spec_tile_m_validation_and_threading():
 
 
 def test_rerank_config_tile_m():
-    from repro.serving.reranker import DPPRerankConfig, rerank
+    from repro.serving.reranker import DPPRerankConfig
+    from conftest import serve_rerank
 
     with pytest.raises(ValueError, match="tile_m"):
         DPPRerankConfig(tile_m=100, use_kernel=True)
@@ -365,8 +366,8 @@ def test_rerank_config_tile_m():
     feats = jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
     feats = feats / jnp.linalg.norm(feats, axis=1, keepdims=True)
     kw = dict(slate_size=10, shortlist=256, eps=1e-6)
-    base, _ = rerank(scores, feats, DPPRerankConfig(**kw))
-    tiled, _ = rerank(
+    base, _ = serve_rerank(scores, feats, DPPRerankConfig(**kw))
+    tiled, _ = serve_rerank(
         scores, feats, DPPRerankConfig(use_kernel=True, tile_m=128, **kw)
     )
     np.testing.assert_array_equal(np.asarray(base), np.asarray(tiled))

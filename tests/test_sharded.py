@@ -23,7 +23,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from conftest import assert_greedy_parity, make_greedy_inputs
+from conftest import assert_greedy_parity, make_greedy_inputs, serve_rerank
 from repro.core import (
     GreedySpec,
     GreedySpecError,
@@ -34,7 +34,7 @@ from repro.core import (
 )
 from repro.core.windowed import dpp_greedy_windowed_lowrank
 from repro.distributed.context import make_mesh_compat
-from repro.serving.reranker import DPPRerankConfig, rerank, rerank_batch
+from repro.serving import DPPRerankConfig, Reranker, RerankRequest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -204,12 +204,12 @@ def test_sharded_rerank_matches_dense_one_device():
     feats = feats / jnp.linalg.norm(feats, axis=1, keepdims=True)
     mesh = make_mesh_compat((1,), ("data",))
     for window in (None, 4):
-        dense, _ = rerank(
+        dense, _ = serve_rerank(
             scores, feats,
             DPPRerankConfig(slate_size=10, shortlist=128, alpha=3.0,
                             eps=1e-6, window=window),
         )
-        sh, _ = rerank(
+        sh, _ = serve_rerank(
             scores, feats,
             DPPRerankConfig(slate_size=10, shortlist=128, alpha=3.0,
                             eps=1e-6, window=window, mesh=mesh),
@@ -264,9 +264,10 @@ def test_sharded_topk_batched_one_device():
 @pytest.mark.parametrize("window", [None, 3])
 @pytest.mark.parametrize("per_user_feats", [False, True])
 def test_rerank_batch_sharded_matches_vmap_one_device(window, per_user_feats):
-    """rerank_batch with cfg.mesh: identical slates, per user, to the
-    vmap of single-device rerank — shared or per-user features, per-user
-    masks, padded M (not divisible by the axis size)."""
+    """A batched request with cfg.mesh: identical slates, per user, to
+    the vmap of the single-device dispatch — shared or per-user
+    features, per-user masks, padded M (not divisible by the axis
+    size)."""
     rng = np.random.default_rng(23)
     B, M, D = 4, 121, 8
     scores = jnp.asarray(rng.uniform(size=(B, M)), jnp.float32)
@@ -277,8 +278,8 @@ def test_rerank_batch_sharded_matches_vmap_one_device(window, per_user_feats):
     mask = jnp.asarray(rng.uniform(size=(B, M)) > 0.25)
     mesh = make_mesh_compat((1,), ("data",))
     kw = dict(slate_size=6, shortlist=64, alpha=3.0, eps=1e-6, window=window)
-    ref, ref_dh = rerank_batch(scores, feats, DPPRerankConfig(**kw), mask=mask)
-    got, got_dh = rerank_batch(
+    ref, ref_dh = serve_rerank(scores, feats, DPPRerankConfig(**kw), mask=mask)
+    got, got_dh = serve_rerank(
         scores, feats, DPPRerankConfig(mesh=mesh, **kw), mask=mask
     )
     assert got.shape == (B, 6)
@@ -299,8 +300,8 @@ def test_rerank_batch_sharded_eps_stop():
     feats = jnp.asarray(feats)
     mesh = make_mesh_compat((1,), ("data",))
     kw = dict(slate_size=10, shortlist=64, alpha=2.0, eps=1e-2)
-    ref, _ = rerank_batch(scores, feats, DPPRerankConfig(**kw))
-    got, _ = rerank_batch(scores, feats, DPPRerankConfig(mesh=mesh, **kw))
+    ref, _ = serve_rerank(scores, feats, DPPRerankConfig(**kw))
+    got, _ = serve_rerank(scores, feats, DPPRerankConfig(mesh=mesh, **kw))
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
     assert (np.asarray(got) == -1).any()  # the stop actually fired
 
@@ -356,33 +357,36 @@ def test_sharded_rerank_masked_score_poison(poison):
     cfg = DPPRerankConfig(
         slate_size=8, shortlist=64, alpha=3.0, eps=1e-6, mesh=mesh
     )
-    slate, dh = rerank(jnp.asarray(scores), jnp.asarray(feats), cfg,
-                       mask=jnp.asarray(mask))
+    slate, dh = serve_rerank(jnp.asarray(scores), jnp.asarray(feats), cfg,
+                             mask=jnp.asarray(mask))
     slate, dh = np.asarray(slate), np.asarray(dh)
     assert (slate >= 0).sum() == 8 and 7 not in slate.tolist()
     assert np.isfinite(dh).all()
     # the poisoned-but-masked score changes nothing vs a clean one
-    ref, _ = rerank(clean, jnp.asarray(feats), cfg, mask=jnp.asarray(mask))
+    ref, _ = serve_rerank(clean, jnp.asarray(feats), cfg,
+                          mask=jnp.asarray(mask))
     np.testing.assert_array_equal(np.asarray(ref), slate)
 
 
 def test_sharded_rerank_rejects_rank_inconsistent_inputs():
-    """Single-request rerank with a mesh must not silently return batched
-    slates when feats or mask carry an unexpected batch axis."""
+    """Rank-inconsistent inputs must never reach the mesh: a request
+    whose feats or mask carry a batch axis the scores lack fails at
+    RerankRequest construction, and a batched request cannot stream."""
     rng = np.random.default_rng(34)
     M, D, B = 64, 6, 3
     scores = jnp.asarray(rng.uniform(size=M), jnp.float32)
     feats = jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
     mesh = make_mesh_compat((1,), ("data",))
     cfg = DPPRerankConfig(slate_size=4, shortlist=32, mesh=mesh)
-    with pytest.raises(ValueError, match="single request"):
-        rerank(jnp.stack([scores] * B), feats, cfg)
     with pytest.raises(ValueError, match="feats must be"):
-        rerank(scores, jnp.stack([feats] * B), cfg)
+        RerankRequest(scores=scores, feats=jnp.stack([feats] * B))
     with pytest.raises(ValueError, match="mask must be"):
-        rerank(scores, feats, cfg, mask=jnp.ones((B, M), bool))
-    with pytest.raises(ValueError, match="user batch"):
-        rerank_batch(scores, feats, cfg)
+        RerankRequest(scores=scores, feats=feats,
+                      mask=jnp.ones((B, M), bool))
+    with pytest.raises(ValueError, match="single request"):
+        Reranker(cfg).stream(
+            RerankRequest(scores=jnp.stack([scores] * B), feats=feats)
+        )
 
 
 def test_sharded_rerank_inf_relevance_outside_shortlist():
@@ -398,10 +402,10 @@ def test_sharded_rerank_inf_relevance_outside_shortlist():
     feats /= np.linalg.norm(feats, axis=1, keepdims=True)
     mesh = make_mesh_compat((1,), ("data",))
     kw = dict(slate_size=8, shortlist=64, alpha=0.5, eps=1e-6)
-    ref, _ = rerank(jnp.asarray(scores), jnp.asarray(feats),
-                    DPPRerankConfig(**kw))
-    got, dh = rerank(jnp.asarray(scores), jnp.asarray(feats),
-                     DPPRerankConfig(mesh=mesh, **kw))
+    ref, _ = serve_rerank(jnp.asarray(scores), jnp.asarray(feats),
+                          DPPRerankConfig(**kw))
+    got, dh = serve_rerank(jnp.asarray(scores), jnp.asarray(feats),
+                           DPPRerankConfig(mesh=mesh, **kw))
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
     assert np.isfinite(np.asarray(dh)).all()
     assert 11 not in np.asarray(got).tolist()
@@ -420,10 +424,10 @@ def test_rerank_mask_excludes_banned_items():
     feats = jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
     feats = feats / jnp.linalg.norm(feats, axis=1, keepdims=True)
     cfg = DPPRerankConfig(slate_size=10, shortlist=64, alpha=3.0, eps=1e-6)
-    base, _ = rerank(scores, feats, cfg)
+    base, _ = serve_rerank(scores, feats, cfg)
     banned = np.asarray(base)[:5]
     mask = jnp.ones(M, bool).at[banned].set(False)
-    slate, _ = rerank(scores, feats, cfg, mask=mask)
+    slate, _ = serve_rerank(scores, feats, cfg, mask=mask)
     slate = np.asarray(slate)
     assert set(banned.tolist()).isdisjoint(set(slate.tolist()))
     assert (slate >= 0).sum() == 10  # the slate refills from unbanned items
@@ -436,7 +440,7 @@ def test_rerank_batch_mask():
     feats = rng.normal(size=(M, D)).astype(np.float32)
     feats /= np.linalg.norm(feats, axis=1, keepdims=True)
     mask = jnp.asarray(rng.uniform(size=(B, M)) > 0.3)
-    slates, _ = rerank_batch(
+    slates, _ = serve_rerank(
         scores, jnp.asarray(feats),
         DPPRerankConfig(slate_size=6, shortlist=48), mask=mask,
     )
@@ -520,7 +524,10 @@ def test_sharded_rerank_multidevice_serving_parity():
         import numpy as np, jax, jax.numpy as jnp
         from repro.core import sharded_topk
         from repro.distributed.context import make_mesh_compat
-        from repro.serving.reranker import DPPRerankConfig, rerank
+        from repro.serving import DPPRerankConfig, Reranker, RerankRequest
+        def rr(s, f, cfg, mask=None):
+            return Reranker(cfg).rerank(
+                RerankRequest(scores=s, feats=f, mask=mask))
         assert jax.device_count() == 8
         mesh = make_mesh_compat((8,), ("data",))
         rng = np.random.default_rng(0)
@@ -536,10 +543,10 @@ def test_sharded_rerank_multidevice_serving_parity():
         # lowering failure (axis_index must stay hoisted out of the loop)
         for window in (None, 1, 5):
             for m in (None, mask):
-                dense, _ = rerank(scores, feats, DPPRerankConfig(
+                dense, _ = rr(scores, feats, DPPRerankConfig(
                     slate_size=16, shortlist=500, alpha=3.0, eps=1e-6,
                     window=window), mask=m)
-                sh, _ = rerank(scores, feats, DPPRerankConfig(
+                sh, _ = rr(scores, feats, DPPRerankConfig(
                     slate_size=16, shortlist=500, alpha=3.0, eps=1e-6,
                     window=window, mesh=mesh), mask=m)
                 np.testing.assert_array_equal(np.asarray(dense), np.asarray(sh))
@@ -550,16 +557,19 @@ def test_sharded_rerank_multidevice_serving_parity():
 @pytest.mark.slow
 def test_rerank_batch_sharded_multidevice_parity():
     """Acceptance bar for the users x candidates composition: on an
-    8-host-device mesh, rerank_batch with cfg.mesh returns slates
+    8-host-device mesh, a batched request with cfg.mesh returns slates
     identical index-for-index (d_hist to ~1 ulp) to vmap of the
-    single-device rerank for B >= 4 users with per-user masks, padded M
-    (not divisible by P), and per-user eps-stop."""
+    single-device dispatch for B >= 4 users with per-user masks, padded
+    M (not divisible by P), and per-user eps-stop."""
     run_subprocess("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import numpy as np, jax, jax.numpy as jnp
         from repro.distributed.context import make_mesh_compat
-        from repro.serving.reranker import DPPRerankConfig, rerank_batch
+        from repro.serving import DPPRerankConfig, Reranker, RerankRequest
+        def rr(s, f, cfg, mask=None):
+            return Reranker(cfg).rerank(
+                RerankRequest(scores=s, feats=f, mask=mask))
         assert jax.device_count() == 8
         mesh = make_mesh_compat((8,), ("data",))
         rng = np.random.default_rng(1)
@@ -573,9 +583,9 @@ def test_rerank_batch_sharded_multidevice_parity():
             for m in (None, mask):
                 kw = dict(slate_size=10, shortlist=400, alpha=3.0,
                           eps=1e-6, window=window)
-                ref, ref_dh = rerank_batch(
+                ref, ref_dh = rr(
                     scores, feats, DPPRerankConfig(**kw), mask=m)
-                got, got_dh = rerank_batch(
+                got, got_dh = rr(
                     scores, feats, DPPRerankConfig(mesh=mesh, **kw), mask=m)
                 np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
                 np.testing.assert_allclose(
@@ -589,8 +599,8 @@ def test_rerank_batch_sharded_multidevice_parity():
         f2 /= np.linalg.norm(f2, axis=-1, keepdims=True)
         f2 = jnp.asarray(f2)
         kw = dict(slate_size=8, shortlist=200, alpha=2.0, eps=1e-2)
-        ref, _ = rerank_batch(s2, f2, DPPRerankConfig(**kw))
-        got, _ = rerank_batch(s2, f2, DPPRerankConfig(mesh=mesh, **kw))
+        ref, _ = rr(s2, f2, DPPRerankConfig(**kw))
+        got, _ = rr(s2, f2, DPPRerankConfig(mesh=mesh, **kw))
         np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
         assert (np.asarray(got) == -1).any()
         print("SHARDED-BATCH-OK")

@@ -10,8 +10,9 @@ jnp rebuild oracle:
 * a hypothesis property pins the stronger invariant: *any prefix* of
   chunks equals the whole-slate prefix (streaming can be cut off at any
   chunk boundary and what was already emitted is final);
-* ``rerank_stream`` equals ``rerank`` through the serving layer
-  (shortlist, global-id mapping, per-chunk d_hist), sharded included;
+* ``Reranker.stream`` equals ``Reranker.rerank`` through the serving
+  layer (shortlist, global-id mapping, per-chunk d_hist), sharded
+  included;
 * the fused Pallas chunk executor makes exactly **one** pallas_call —
   one HBM C/d2 round-trip — per chunk, not one per step (checked
   structurally on the jaxpr), while the whole-slate tiled driver keeps
@@ -29,7 +30,12 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from conftest import assert_greedy_parity, make_greedy_inputs
+from conftest import (
+    assert_greedy_parity,
+    make_greedy_inputs,
+    serve_rerank,
+    serve_rerank_stream,
+)
 from repro.core import (
     GreedySpec,
     GreedySpecError,
@@ -40,7 +46,7 @@ from repro.core import (
     greedy_step,
 )
 from repro.distributed.context import make_mesh_compat
-from repro.serving.reranker import DPPRerankConfig, rerank, rerank_stream
+from repro.serving.reranker import DPPRerankConfig
 
 _ENV_TILE = int(os.environ["DPP_TILE_M"]) if os.environ.get("DPP_TILE_M") else None
 
@@ -218,7 +224,7 @@ def test_prefix_of_chunks_equals_whole_prefix_property():
 
 
 # ---------------------------------------------------------------------------
-# Serving layer: rerank_stream == rerank
+# Serving layer: Reranker.stream == Reranker.rerank
 # ---------------------------------------------------------------------------
 
 
@@ -250,8 +256,8 @@ def test_rerank_stream_matches_rerank(backend, window):
         slate_size=N, shortlist=128, alpha=3.0, eps=1e-6, window=window,
         chunk_size=chunk, **_serving_cfgs()[backend],
     )
-    ref, ref_dh = rerank(scores, feats, cfg, mask=mask)
-    chunks = list(rerank_stream(scores, feats, cfg, mask=mask))
+    ref, ref_dh = serve_rerank(scores, feats, cfg, mask=mask)
+    chunks = list(serve_rerank_stream(scores, feats, cfg, mask=mask))
     assert [c[0].shape[0] for c in chunks] == [4, 4, 2]
     sel = np.concatenate([np.asarray(c[0]) for c in chunks])
     dh = np.concatenate([np.asarray(c[1]) for c in chunks])
@@ -268,9 +274,9 @@ def test_rerank_stream_chunk_size_required_and_overridable():
     feats = jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
     cfg = DPPRerankConfig(slate_size=6, shortlist=32)
     with pytest.raises(ValueError, match="chunk size"):
-        next(rerank_stream(scores, feats, cfg))
-    ref, _ = rerank(scores, feats, cfg)
-    chunks = list(rerank_stream(scores, feats, cfg, chunk_size=2))
+        next(serve_rerank_stream(scores, feats, cfg))
+    ref, _ = serve_rerank(scores, feats, cfg)
+    chunks = list(serve_rerank_stream(scores, feats, cfg, chunk_size=2))
     assert len(chunks) == 3
     np.testing.assert_array_equal(
         np.concatenate([np.asarray(c[0]) for c in chunks]), np.asarray(ref)

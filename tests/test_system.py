@@ -13,7 +13,8 @@ from repro.core import (
 )
 from repro.data import candidates_and_relevance, item_similarity, load_preset
 from repro.models import recsys as recsys_mod
-from repro.serving.reranker import DPPRerankConfig, rerank, rerank_batch
+from repro.serving.reranker import DPPRerankConfig
+from conftest import serve_rerank
 
 
 def test_serving_pipeline_end_to_end():
@@ -33,8 +34,9 @@ def test_serving_pipeline_end_to_end():
              ids[:, cfg.item_field + 1:]], axis=1)
         scores = recsys_mod.serve_scores(params, ids, cfg)
         feats = recsys_mod.item_embeddings(params, cand, cfg)
-        return rerank(scores, feats, DPPRerankConfig(slate_size=8, shortlist=32,
-                                                     alpha=2.0))
+        return serve_rerank(scores, feats,
+                            DPPRerankConfig(slate_size=8, shortlist=32,
+                                            alpha=2.0))
 
     slate, dh = serve(params, user)
     slate = np.asarray(slate)
@@ -61,7 +63,7 @@ def test_dpp_slate_beats_topn_on_min_dissimilarity():
         feats = np.linalg.cholesky(
             S[np.ix_(cand, cand)] + 1e-4 * np.eye(cand.size)
         ).astype(np.float32)  # factor so S = F F^T
-        slate, _ = rerank(
+        slate, _ = serve_rerank(
             jnp.asarray(rel_n), jnp.asarray(feats),
             DPPRerankConfig(slate_size=8, shortlist=int(cand.size), alpha=1.5),
         )
@@ -82,7 +84,7 @@ def test_batched_rerank_shapes():
     scores = jnp.asarray(rng.uniform(size=(B, M)), jnp.float32)
     feats = rng.normal(size=(M, D)).astype(np.float32)
     feats /= np.linalg.norm(feats, axis=1, keepdims=True)
-    slates, dh = rerank_batch(scores, jnp.asarray(feats),
+    slates, dh = serve_rerank(scores, jnp.asarray(feats),
                               DPPRerankConfig(slate_size=6, shortlist=32))
     assert slates.shape == (B, 6)
     for b in range(B):

@@ -125,7 +125,8 @@ def test_greedy_map_dispatch():
 
 def test_reranker_windowed_long_feed():
     """Serving path: a window lets the slate run past the kernel rank."""
-    from repro.serving.reranker import DPPRerankConfig, rerank
+    from repro.serving.reranker import DPPRerankConfig
+    from conftest import serve_rerank
 
     rng = np.random.default_rng(2)
     M, D = 200, 12  # rank 12 << slate 48
@@ -134,8 +135,8 @@ def test_reranker_windowed_long_feed():
     feats = feats / jnp.linalg.norm(feats, axis=1, keepdims=True)
     exact_cfg = DPPRerankConfig(slate_size=48, shortlist=M, eps=1e-3)
     win_cfg = DPPRerankConfig(slate_size=48, shortlist=M, eps=1e-3, window=6)
-    sel_exact, _ = rerank(scores, feats, exact_cfg)
-    sel_win, _ = rerank(scores, feats, win_cfg)
+    sel_exact, _ = serve_rerank(scores, feats, exact_cfg)
+    sel_win, _ = serve_rerank(scores, feats, win_cfg)
     n_exact = int((np.asarray(sel_exact) >= 0).sum())
     n_win = int((np.asarray(sel_win) >= 0).sum())
     assert n_exact < 48  # exact eps-stops well short of the feed length
