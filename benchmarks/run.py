@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import hashlib
 import io
 import json
 import os
@@ -28,6 +29,48 @@ import time
 
 from repro import obs
 from repro.obs import ObsConfig
+
+
+def bench_meta():
+    """Device/provenance stamp for every BENCH_<fig>.json: which
+    accelerator and jax produced the numbers, plus the tile overrides in
+    effect (``DPP_TILE_M`` and the autotune cache file + content hash) —
+    enough to tell two artifacts apart without re-running anything.
+    Purely best-effort: a field that cannot be determined reads
+    "unknown" rather than failing the benchmark that produced it."""
+    meta = {
+        "device_kind": "unknown", "platform": "unknown",
+        "backend": "unknown", "jax": "unknown", "jaxlib": "unknown",
+        "dpp_tile_m": os.environ.get("DPP_TILE_M"),
+        "autotune_cache": None, "autotune_cache_sha256": None,
+    }
+    try:
+        import jax
+
+        meta["jax"] = jax.__version__
+        try:
+            import jaxlib
+
+            meta["jaxlib"] = jaxlib.__version__
+        except Exception:
+            pass
+        from repro.kernels.dpp_greedy.autotune import (
+            active_cache_path,
+            device_fingerprint,
+        )
+
+        dk, plat, backend = device_fingerprint()
+        meta.update(device_kind=dk, platform=plat, backend=backend)
+        path = active_cache_path()
+        meta["autotune_cache"] = path
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                meta["autotune_cache_sha256"] = hashlib.sha256(
+                    f.read()
+                ).hexdigest()
+    except Exception:
+        pass
+    return meta
 
 
 class _Tee(io.TextIOBase):
@@ -87,6 +130,7 @@ def run_fig(fig, title, fn, fast, out_dir):
         "error": error,
         "fast_mode": fast,
         "elapsed_s": round(time.perf_counter() - t0, 3),
+        "meta": bench_meta(),
         "rows": _parse_rows(tee.getvalue()),
     }
     if obs.registry() is not None:
@@ -115,6 +159,7 @@ def main() -> None:
         fig6_streaming,
         fig7_serving,
         fig8_observability,
+        fig9_autotune,
     )
 
     figures = [
@@ -134,6 +179,8 @@ def main() -> None:
          "percentiles", fig7_serving.main),
         ("fig8", "Figure 8: observability — pump breakdown and the "
          "recompile ledger", fig8_observability.main),
+        ("fig9", "Figure 9: measured autotune cache vs the analytical "
+         "VMEM model", fig9_autotune.main),
     ]
     failed = [
         fig for fig, title, fn in figures

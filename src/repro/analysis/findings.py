@@ -85,6 +85,13 @@ RULES: dict[str, str] = {
         "BlockSpecs actually declare (the policy would pick an "
         "overflowing tile)"
     ),
+    "autotune-cache-invalid": (
+        "a persisted autotune cache entry that could ship a bad launch "
+        "— over the VMEM budget (model or declared BlockSpecs), a "
+        "non-LANE tile, key/fields divergence (hand-edited), a "
+        "compiled multi-tile chunk geometry (Mosaic revisit gaps), or "
+        "an unreadable/foreign-schema cache file"
+    ),
     # -- framework -------------------------------------------------------
     "bad-suppression": (
         "`# repro: ignore[...]` naming an unknown rule id (typo would "

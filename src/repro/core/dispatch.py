@@ -51,7 +51,7 @@ surfacing as a shape or trace error deep inside a jitted computation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import jax.numpy as jnp
 
@@ -88,7 +88,9 @@ class GreedySpec:
     interpret: bool = True  # Pallas interpret mode (CPU dev/test)
     mesh: Optional[object] = None  # jax Mesh for the sharded backend
     axis_name: str = "data"  # mesh axis the candidate axis shards over
-    tile_m: Optional[int] = None  # Pallas candidate-axis tile (None = auto)
+    # Pallas candidate-axis tile: an explicit LANE multiple, "auto"
+    # (measured autotune cache, model fallback), or None (VMEM model)
+    tile_m: Union[int, str, None] = None
     chunk_size: Optional[int] = None  # greedy steps per resumable chunk
 
     def __post_init__(self):
@@ -116,16 +118,25 @@ class GreedySpec:
             from repro.kernels.dpp_greedy.tiling import validate_tile_m
 
             try:
-                validate_tile_m(self.tile_m)
+                validate_tile_m(self.tile_m, allow_auto=True)
             except ValueError as e:
                 raise GreedySpecError(str(e)) from None
+            if self.tile_m == "auto" and self.backend != "pallas":
+                raise GreedySpecError(
+                    'tile_m="auto" consults the measured autotune cache, '
+                    "which only the single-device Pallas dispatch does "
+                    "(backend='pallas') — the jnp backend ignores tile_m "
+                    "entirely and the sharded per-device update needs an "
+                    "explicit LANE multiple"
+                )
             if self.backend == "jnp" or (
                 self.backend == "auto" and self.mesh is None
             ):
                 raise GreedySpecError(
-                    "tile_m= only applies to the Pallas kernels (backend="
-                    "'pallas', or 'sharded'/'auto' with a mesh) — on the "
-                    "jnp backend it would be silently ignored"
+                    "tile_m= (an int or \"auto\") only applies to the "
+                    "Pallas kernels (backend='pallas', or 'sharded'/'auto' "
+                    "with a mesh) — on the jnp backend it would be "
+                    "silently ignored"
                 )
         if self.backend not in _BACKENDS:
             raise GreedySpecError(

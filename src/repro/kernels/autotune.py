@@ -1,0 +1,18 @@
+"""``python -m repro.kernels.autotune`` — measured kernel-geometry
+sweep for the dpp_greedy Pallas seams.
+
+Thin runner over :mod:`repro.kernels.dpp_greedy.autotune` (the cache,
+keying, and measurement harness live there, next to the kernels they
+tune).  Typical use::
+
+    python -m repro.kernels.autotune --smoke          # tiny CI preset
+    python -m repro.kernels.autotune --full --trials 5
+
+then serve with ``tile_m="auto"`` (``GreedySpec`` / ``DPPRerankConfig``)
+pointed at the same cache (``$DPP_AUTOTUNE_CACHE`` or the per-user
+default).
+"""
+from repro.kernels.dpp_greedy.autotune import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

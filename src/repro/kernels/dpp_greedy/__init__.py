@@ -1,3 +1,11 @@
+from repro.kernels.dpp_greedy.autotune import (
+    AutotuneCache,
+    active_cache_path,
+    bucket_m,
+    cache_key,
+    lookup_tile,
+    run_sweep,
+)
 from repro.kernels.dpp_greedy.ops import (
     dpp_greedy,
     dpp_greedy_stream_chunk,
@@ -20,6 +28,12 @@ __all__ = [
     "dpp_greedy_stream_init",
     "dpp_greedy_stream_pad",
     "dpp_greedy_tiled",
+    "AutotuneCache",
+    "active_cache_path",
+    "bucket_m",
+    "cache_key",
+    "lookup_tile",
+    "run_sweep",
     "TilePolicy",
     "VMEM_BUDGET_BYTES",
     "tile_vmem_bytes",

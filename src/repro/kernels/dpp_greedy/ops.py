@@ -21,7 +21,8 @@ and the per-tile model depend on ``w`` rather than the slate length.
 """
 from __future__ import annotations
 
-from typing import Optional
+import os
+from typing import Optional, Union
 
 import jax.numpy as jnp
 
@@ -43,8 +44,73 @@ from repro.kernels.dpp_greedy.tiling import (  # noqa: F401
     round_up as _round_up,
     tile_vmem_bytes,
     untiled_vmem_bytes,
+    validate_tile_m,
 )
-from repro.obs.dispatch import record_kernel_dispatch
+from repro.obs.dispatch import (
+    record_kernel_dispatch,
+    record_tile_override,
+    record_tile_resolution,
+)
+
+_TileM = Union[int, str, None]  # int | "auto" | None
+
+
+def _env_tile_m() -> _TileM:
+    """Parse the ``DPP_TILE_M`` process override: unset/empty -> None,
+    ``auto`` -> the autotune ladder, anything else an explicit LANE
+    multiple.  Invalid values raise — a typo'd fleet-wide override must
+    fail loudly, not silently fall back to the model."""
+    raw = os.environ.get("DPP_TILE_M", "").strip()
+    if not raw:
+        return None
+    if raw.lower() == "auto":
+        return "auto"
+    try:
+        tm = int(raw)
+    except ValueError:
+        raise ValueError(
+            f'DPP_TILE_M must be an integer LANE multiple or "auto", '
+            f"got {raw!r}"
+        ) from None
+    validate_tile_m(tm)
+    return tm
+
+
+def _resolve_tile_policy(
+    tile_m: _TileM, tile_policy: Optional[TilePolicy]
+) -> TilePolicy:
+    """The tile_m precedence ladder, applied once per dispatch:
+
+        DPP_TILE_M env > explicit ``tile_m=`` > ``"auto"`` cache >
+        analytical model
+
+    (the cache-vs-model rungs resolve inside ``TilePolicy.decide``).
+    An explicit ``tile_policy=`` *object* bypasses the env override —
+    the power-user escape hatch the autotune sweep itself uses so the
+    environment being tuned cannot hijack its measurements.  Losing
+    sources are recorded in dispatch telemetry, not silently ignored.
+    """
+    if tile_m is not None and tile_policy is not None:
+        raise ValueError("pass at most one of tile_m= or tile_policy=")
+    if tile_policy is not None:
+        record_tile_resolution("policy")
+        return tile_policy
+    env = _env_tile_m()
+    if env is not None:
+        if tile_m is not None and env != tile_m:
+            record_tile_override(
+                winner="env",
+                lost="auto" if tile_m == "auto" else "explicit",
+            )
+        record_tile_resolution("env")
+        return TilePolicy(tile_m=env)
+    if tile_m == "auto":
+        record_tile_resolution("auto")
+    elif tile_m is not None:
+        record_tile_resolution("explicit")
+    else:
+        record_tile_resolution("model")
+    return TilePolicy(tile_m=tile_m)
 
 
 def dpp_greedy(
@@ -55,7 +121,7 @@ def dpp_greedy(
     interpret: bool = True,
     force_jnp: bool = False,
     window: int | None = None,
-    tile_m: Optional[int] = None,
+    tile_m: _TileM = None,
     tile_policy: Optional[TilePolicy] = None,
 ):
     """Batched greedy DPP MAP inference.
@@ -66,15 +132,16 @@ def dpp_greedy(
     unbounded k); ``window >= k`` or None is the exact Algorithm 1.
 
     ``tile_m`` (or a full ``tile_policy``) forces the tiled streaming
-    kernels with that candidate-axis tile; by default ``TilePolicy``
-    picks the resident kernels when the working set fits VMEM and the
-    widest fitting tile otherwise.
+    kernels with that candidate-axis tile; ``tile_m="auto"`` sizes the
+    tile from the measured autotune cache (model fallback on a miss);
+    by default ``TilePolicy`` picks the resident kernels when the
+    working set fits VMEM and the widest model-fitting tile otherwise.
+    The ``DPP_TILE_M`` env var (an int or ``auto``) overrides ``tile_m``
+    process-wide; an explicit ``tile_policy=`` object bypasses the env.
     """
     B, D, M = V.shape
     if window is not None and window < 1:
         raise ValueError(f"window must be >= 1, got {window}")
-    if tile_m is not None and tile_policy is not None:
-        raise ValueError("pass at most one of tile_m= or tile_policy=")
     if mask is None:
         mask = jnp.ones((B, M), bool)
     state_rows = k if window is None else min(window, k)
@@ -85,7 +152,7 @@ def dpp_greedy(
         )
         return dpp_greedy_ref(V, mask, k, eps, window=window)
 
-    policy = tile_policy or TilePolicy(tile_m=tile_m)
+    policy = _resolve_tile_policy(tile_m, tile_policy)
     mode, tm = policy.decide(D, M, state_rows, windowed)
     record_kernel_dispatch(
         mode, D=D, M=M, state_rows=state_rows, windowed=windowed, tile_m=tm,
@@ -119,14 +186,15 @@ def dpp_greedy(
 
 
 def _stream_tile(D: int, M: int, state_rows: int, windowed: bool,
-                 tile_m: Optional[int], tile_policy: Optional[TilePolicy]):
+                 tile_m: _TileM, tile_policy: Optional[TilePolicy]):
     """The candidate-axis tile a streaming state uses, derived
     deterministically from the problem shape so init and every chunk
-    agree.  Resident-size working sets run the fused chunk kernel as a
-    single whole-M tile (the VMEM-resident analogue)."""
-    if tile_m is not None and tile_policy is not None:
-        raise ValueError("pass at most one of tile_m= or tile_policy=")
-    policy = tile_policy or TilePolicy(tile_m=tile_m)
+    agree (the autotune cache is memoized per file stamp, so a cache
+    rewritten mid-stream surfaces as the existing padded-geometry
+    mismatch error, not silent divergence).  Resident-size working sets
+    run the fused chunk kernel as a single whole-M tile (the
+    VMEM-resident analogue)."""
+    policy = _resolve_tile_policy(tile_m, tile_policy)
     # chunked=True: the fused chunk kernels stream the full Cholesky
     # block back out every step, so their per-tile working set is wider
     # than the per-step sweep the default model describes.
@@ -148,7 +216,7 @@ def dpp_greedy_stream_init(
     k: int,
     mask: jnp.ndarray | None = None,
     window: int | None = None,
-    tile_m: Optional[int] = None,
+    tile_m: _TileM = None,
     tile_policy: Optional[TilePolicy] = None,
 ):
     """Initial resumable state for the Pallas streaming path.
@@ -218,7 +286,7 @@ def dpp_greedy_stream_chunk(
     chunk: int,
     *,
     eps: float = 1e-3,
-    tile_m: Optional[int] = None,
+    tile_m: _TileM = None,
     tile_policy: Optional[TilePolicy] = None,
     interpret: bool = True,
 ):

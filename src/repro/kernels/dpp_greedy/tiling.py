@@ -32,7 +32,11 @@ working set is :func:`untiled_vmem_bytes`, the per-tile model
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
+
+# What the tile_m knob accepts across the stack: an explicit LANE
+# multiple, the measured-autotuner mode, or None (VMEM model decides).
+TileM = Union[int, str, None]
 
 LANE = 128
 SUBLANE = 8
@@ -49,13 +53,32 @@ def round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-def validate_tile_m(tile_m: Optional[int]) -> None:
+def validate_tile_m(tile_m: TileM, allow_auto: bool = False) -> None:
     """Shared tile_m validation (TilePolicy, GreedySpec, DPPRerankConfig,
-    dpp_greedy_sharded all accept the knob): a positive LANE multiple."""
-    if tile_m is not None and (tile_m < LANE or tile_m % LANE != 0):
+    dpp_greedy_sharded all accept the knob): ``None``, a positive LANE
+    multiple, or — where ``allow_auto`` — the string ``"auto"`` (consult
+    the measured autotune cache, fall back to the VMEM model).  Call
+    sites that cannot consult the cache (the sharded per-device update,
+    the jnp backend) keep the default ``allow_auto=False`` so a stray
+    ``"auto"`` fails loudly instead of leaking a string into tile
+    arithmetic."""
+    if tile_m is None:
+        return
+    if tile_m == "auto":
+        if allow_auto:
+            return
         raise ValueError(
-            f"tile_m must be a positive multiple of the {LANE}-lane "
-            f"register width, got {tile_m}"
+            'tile_m="auto" (the measured autotune cache) is only '
+            "understood by the single-device Pallas dispatch — this "
+            f"call site needs None or an explicit positive multiple of "
+            f"the {LANE}-lane register width"
+        )
+    if (not isinstance(tile_m, int) or isinstance(tile_m, bool)
+            or tile_m < LANE or tile_m % LANE != 0):
+        raise ValueError(
+            f'tile_m must be None, "auto" (measured autotune cache with '
+            f"VMEM-model fallback), or a positive multiple of the "
+            f"{LANE}-lane register width, got {tile_m!r}"
         )
 
 
@@ -110,16 +133,20 @@ class TilePolicy:
         kernels would fit — that is how tiled-vs-resident parity is
         tested.  ``None`` picks automatically: resident when the whole
         working set fits ``vmem_budget_bytes``, otherwise the widest
-        fitting tile.
+        fitting tile.  ``"auto"`` keeps the resident-when-it-fits rule
+        but sizes the tiled mode from the *measured* autotune cache
+        (``repro.kernels.dpp_greedy.autotune``) when it has an entry
+        for this device/geometry, falling back to the analytical model
+        — never an error — when it does not.
     vmem_budget_bytes:
         The budget both models are checked against.
     """
 
-    tile_m: Optional[int] = None
+    tile_m: TileM = None
     vmem_budget_bytes: int = VMEM_BUDGET_BYTES
 
     def __post_init__(self):
-        validate_tile_m(self.tile_m)
+        validate_tile_m(self.tile_m, allow_auto=True)
         if self.vmem_budget_bytes <= 0:
             raise ValueError(
                 f"vmem_budget_bytes must be positive, got "
@@ -154,11 +181,23 @@ class TilePolicy:
         every step) — sizing a chunked tile with the per-step model
         overflows the budget by ``~8 * state_rows * tile_m`` bytes.
         """
-        if self.tile_m is not None:
+        if self.tile_m is not None and self.tile_m != "auto":
             return "tiled", self.tile_m
         if untiled_vmem_bytes(D, M, state_rows) <= self.vmem_budget_bytes:
             return "resident", None
-        tm = self.auto_tile(D, state_rows, windowed, chunked)
+        tm = None
+        if self.tile_m == "auto":
+            # measured winner for this device/geometry, prefiltered to
+            # the budget; a miss (no cache, unknown device, corrupted
+            # JSON) falls through to the analytical model below
+            from repro.kernels.dpp_greedy.autotune import lookup_tile
+
+            tm = lookup_tile(
+                D=D, M=M, state_rows=state_rows, windowed=windowed,
+                chunked=chunked, vmem_budget_bytes=self.vmem_budget_bytes,
+            )
+        if tm is None:
+            tm = self.auto_tile(D, state_rows, windowed, chunked)
         if tm == 0:
             return "jnp", None
         return "tiled", min(tm, round_up(M, LANE))

@@ -167,6 +167,60 @@ def record_kernel_dispatch(
         ).set(vmem_bytes)
 
 
+def record_tile_resolution(source: str) -> None:
+    """Which source won one tile_m precedence resolution in ``ops.py``
+    (``env`` > ``explicit`` int > requested ``auto`` > ``model``;
+    ``policy`` = an explicit TilePolicy object bypassed the ladder)."""
+    reg = _obs.registry()
+    if reg is None:
+        return
+    reg.counter(
+        "dpp_tile_source_total",
+        "tile_m precedence winners by source "
+        "(env/explicit/auto/model/policy)",
+    ).inc(source=source)
+
+
+def record_tile_override(winner: str, lost: str) -> None:
+    """A tile_m request that *lost* the precedence resolution (e.g. a
+    call-site ``tile_m=`` shadowed by the ``DPP_TILE_M`` env override) —
+    recorded instead of silently ignored."""
+    reg = _obs.registry()
+    if reg is None:
+        return
+    reg.counter(
+        "dpp_tile_override_total",
+        "tile_m requests shadowed by a higher-precedence source",
+    ).inc(winner=winner, lost=lost)
+
+
+def record_autotune_lookup(
+    outcome: str, *, reason: str = "", tile_m: Optional[int] = None
+) -> None:
+    """One ``tile_m=\"auto\"`` cache consultation: an ``exact`` or
+    nearest-``bucket`` hit (with the chosen geometry), or a ``miss``
+    with its reason (empty/corrupt/no_entry/error) — the miss falls
+    back to the analytical VMEM model, never an error."""
+    reg = _obs.registry()
+    if reg is None:
+        return
+    if outcome in ("exact", "bucket"):
+        reg.counter(
+            "autotune_cache_hits_total",
+            "tile_m='auto' lookups that produced a measured tile",
+        ).inc(kind=outcome)
+        if tile_m is not None:
+            reg.gauge(
+                "autotune_tile_m",
+                "tile chosen by the last autotune cache hit",
+            ).set(tile_m)
+    else:
+        reg.counter(
+            "autotune_cache_misses_total",
+            "tile_m='auto' lookups that fell back to the VMEM model",
+        ).inc(reason=reason or "unknown")
+
+
 def record_greedy_map(backend: str, *, B: int, k: int, M: int,
                       chunked: bool = False) -> None:
     """One whole-slate ``greedy_map`` dispatch.  Launched work (steps,

@@ -57,7 +57,7 @@ builder the session API dispatches through.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -89,7 +89,9 @@ class DPPRerankConfig:
     window: Optional[int] = None  # sliding diversity window (None = exact)
     mesh: Optional[object] = None  # shard the candidate axis over this mesh
     axis_name: str = "data"  # mesh axis carrying the candidate shards
-    tile_m: Optional[int] = None  # Pallas candidate-axis tile (None = auto)
+    # Pallas candidate-axis tile: an explicit LANE multiple, "auto"
+    # (measured autotune cache, model fallback), or None (VMEM model)
+    tile_m: Union[int, str, None] = None
     interpret: bool = True  # Pallas interpret mode (False on real TPU)
     chunk_size: Optional[int] = None  # Reranker.stream emission granularity
     obs: Optional[ObsConfig] = None  # observability (installed by Reranker)
@@ -115,12 +117,19 @@ class DPPRerankConfig:
         if self.tile_m is not None:
             from repro.kernels.dpp_greedy.tiling import validate_tile_m
 
-            validate_tile_m(self.tile_m)
+            validate_tile_m(self.tile_m, allow_auto=True)
+            if self.tile_m == "auto" and not self.use_kernel:
+                raise ValueError(
+                    'tile_m="auto" consults the measured autotune cache, '
+                    "which only the Pallas kernels do — set "
+                    "use_kernel=True (the jnp and sharded backends do "
+                    "not consult the cache)"
+                )
             if not self.use_kernel and self.mesh is None:
                 raise ValueError(
-                    "tile_m= tiles the Pallas kernels — it needs "
-                    "use_kernel=True or mesh= (the jnp backend would "
-                    "silently ignore it)"
+                    'tile_m= (an int or "auto") tiles the Pallas kernels '
+                    "— it needs use_kernel=True or mesh= (the jnp "
+                    "backend would silently ignore it)"
                 )
 
     def greedy_spec(self) -> GreedySpec:

@@ -1,0 +1,494 @@
+"""Measured kernel-geometry autotuner: keying, bucketing, lookup
+ladder, precedence, and the real sweep.
+
+Property tests (M-bucketing monotone, key normalization, nearest-bucket
+never over-budget) run under hypothesis when it is installed and over a
+seeded deterministic sample otherwise — the invariants are checked
+either way, the library only widens the search.
+
+The telemetry assertions use a scoped obs session; everything else runs
+with observability disabled (the recording hooks must be no-ops there).
+"""
+import json
+import os
+import random
+
+import pytest
+
+import repro.obs as obs
+from repro.core import GreedySpec, GreedySpecError
+from repro.kernels.dpp_greedy import (
+    TilePolicy,
+    VMEM_BUDGET_BYTES,
+    bucket_m,
+    cache_key,
+    lookup_tile,
+    run_sweep,
+    tile_vmem_bytes,
+)
+from repro.kernels.dpp_greedy.autotune import (
+    AutotuneCache,
+    SweepCase,
+    active_cache_path,
+    candidate_tiles,
+    default_cache_path,
+    device_fingerprint,
+)
+from repro.kernels.dpp_greedy.ops import _resolve_tile_policy
+from repro.kernels.dpp_greedy.tiling import (
+    LANE,
+    MAX_AUTO_TILE,
+    validate_tile_m,
+)
+from repro.serving.reranker import DPPRerankConfig
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: seeded sample below
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed"
+)
+
+
+def _seed_cache(path, entries, device=None):
+    """Write a cache at ``path`` holding ``entries`` (dicts of put()
+    kwargs) for ``device`` (default: this process's real fingerprint,
+    so lookup_tile can actually hit)."""
+    cache = AutotuneCache(str(path), {})
+    device = device or device_fingerprint()
+    for e in entries:
+        cache.put(interpret=True, best_us=1.0,
+                  candidates={e["tile_m"]: 1.0}, device=device, **e)
+    cache.save()
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# M-bucketing properties
+# ---------------------------------------------------------------------------
+
+
+def _check_bucket(M):
+    b = bucket_m(M)
+    assert b >= max(M, LANE)
+    assert b & (b - 1) == 0, f"bucket {b} not a power of two"
+    assert b % LANE == 0
+    # tight: the next smaller power of two would not cover M
+    assert b == LANE or b // 2 < max(M, LANE)
+
+
+def _check_bucket_monotone(M1, M2):
+    lo, hi = sorted((M1, M2))
+    assert bucket_m(lo) <= bucket_m(hi)
+
+
+def test_bucket_m_properties_seeded():
+    rng = random.Random(0)
+    sample = [1, 2, 127, 128, 129, 255, 256, 4095, 4096, 65536, 65537]
+    sample += [rng.randrange(1, 1 << 22) for _ in range(500)]
+    for M in sample:
+        _check_bucket(M)
+    for _ in range(500):
+        _check_bucket_monotone(rng.randrange(1, 1 << 22),
+                               rng.randrange(1, 1 << 22))
+
+
+def test_bucket_m_rejects_nonpositive():
+    for M in (0, -1, -128):
+        with pytest.raises(ValueError, match="M must be"):
+            bucket_m(M)
+
+
+if HAVE_HYPOTHESIS:
+
+    @needs_hypothesis
+    @settings(max_examples=300, deadline=None)
+    @given(st.integers(min_value=1, max_value=1 << 24))
+    def test_bucket_m_properties_hypothesis(M):
+        _check_bucket(M)
+
+    @needs_hypothesis
+    @settings(max_examples=300, deadline=None)
+    @given(st.integers(min_value=1, max_value=1 << 24),
+           st.integers(min_value=1, max_value=1 << 24))
+    def test_bucket_m_monotone_hypothesis(M1, M2):
+        _check_bucket_monotone(M1, M2)
+
+
+# ---------------------------------------------------------------------------
+# Key normalization properties
+# ---------------------------------------------------------------------------
+
+
+def _check_key_normalization(dk, plat, backend):
+    base = cache_key(dk, plat, backend, 64, 1024, 8, False, False)
+    # case/whitespace-insensitive on the free-text device fields
+    assert base == cache_key(f"  {str(dk).upper()}  ", plat, backend,
+                             64, 1024, 8, False, False)
+    # exactly 8 fields regardless of what the device strings contain —
+    # a "|" inside a field must not shift the structured fields
+    assert base.count("|") == 7
+
+
+def _check_key_injective(a, b):
+    """Distinct structured fields -> distinct keys."""
+    ka = cache_key("dev", "cpu", "cpu", *a)
+    kb = cache_key("dev", "cpu", "cpu", *b)
+    if a != b:
+        assert ka != kb
+    else:
+        assert ka == kb
+
+
+def test_cache_key_normalization_seeded():
+    for dk in ("TPU v4", " tpu  v4 ", "NVIDIA A100-SXM4|80GB", "cpu"):
+        _check_key_normalization(dk, "tpu", "tpu")
+    # the pipe is sanitized out of fields, so these collapse to one key
+    assert cache_key("a|b", "cpu", "cpu", 8, 128, 8, True, True) == \
+        cache_key("a-b", "cpu", "cpu", 8, 128, 8, True, True)
+    rng = random.Random(1)
+    dims = lambda: (rng.choice((8, 64, 256)), rng.choice((128, 1024, 65536)),
+                    rng.choice((8, 16)), rng.random() < 0.5,
+                    rng.random() < 0.5)
+    for _ in range(300):
+        _check_key_injective(dims(), dims())
+
+
+if HAVE_HYPOTHESIS:
+
+    _field = st.text(min_size=1, max_size=20)
+    _geom = st.tuples(st.integers(1, 512), st.integers(128, 1 << 20),
+                      st.integers(1, 64), st.booleans(), st.booleans())
+
+    @needs_hypothesis
+    @settings(max_examples=200, deadline=None)
+    @given(_field, _field, _field)
+    def test_cache_key_normalization_hypothesis(dk, plat, backend):
+        _check_key_normalization(dk, plat, backend)
+
+    @needs_hypothesis
+    @settings(max_examples=200, deadline=None)
+    @given(_geom, _geom)
+    def test_cache_key_injective_hypothesis(a, b):
+        _check_key_injective(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Lookup ladder: hits, nearest bucket, fallbacks
+# ---------------------------------------------------------------------------
+
+
+def test_lookup_exact_hit(tmp_path):
+    path = tmp_path / "cache.json"
+    _seed_cache(path, [dict(D=16, M_bucket=4096, state_rows=8,
+                            windowed=False, chunked=False, tile_m=128)])
+    tm = lookup_tile(D=16, M=4000, state_rows=8, windowed=False,
+                     chunked=False, path=str(path))
+    assert tm == 128
+
+
+def test_lookup_nearest_bucket(tmp_path):
+    path = tmp_path / "cache.json"
+    _seed_cache(path, [
+        dict(D=16, M_bucket=1024, state_rows=8, windowed=False,
+             chunked=False, tile_m=128),
+        dict(D=16, M_bucket=65536, state_rows=8, windowed=False,
+             chunked=False, tile_m=512),
+    ])
+    # M=3000 buckets to 4096: no exact entry; 1024 is closer in log2
+    # (2 octaves) than 65536 (4 octaves)
+    tm = lookup_tile(D=16, M=3000, state_rows=8, windowed=False,
+                     chunked=False, path=str(path))
+    assert tm == 128
+    # M=40000 buckets to 65536: exact hit on the other entry
+    tm = lookup_tile(D=16, M=40000, state_rows=8, windowed=False,
+                     chunked=False, path=str(path))
+    assert tm == 512
+
+
+def test_lookup_misses_fall_back_to_none(tmp_path):
+    # missing file
+    assert lookup_tile(D=16, M=4096, state_rows=8, windowed=False,
+                       chunked=False,
+                       path=str(tmp_path / "absent.json")) is None
+    # corrupted JSON
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json", encoding="utf-8")
+    assert lookup_tile(D=16, M=4096, state_rows=8, windowed=False,
+                       chunked=False, path=str(bad)) is None
+    # foreign schema
+    foreign = tmp_path / "foreign.json"
+    foreign.write_text(json.dumps({"schema": 99, "entries": {}}),
+                       encoding="utf-8")
+    assert lookup_tile(D=16, M=4096, state_rows=8, windowed=False,
+                       chunked=False, path=str(foreign)) is None
+    # entry for a different device never matches this process
+    other = tmp_path / "other.json"
+    _seed_cache(other, [dict(D=16, M_bucket=4096, state_rows=8,
+                             windowed=False, chunked=False, tile_m=128)],
+                device=("some-other-accelerator", "tpu", "tpu"))
+    assert lookup_tile(D=16, M=4096, state_rows=8, windowed=False,
+                       chunked=False, path=str(other)) is None
+
+
+def test_lookup_revalidates_stale_entries(tmp_path):
+    """A hand-edited entry degrades to a miss, never a bad launch."""
+    path = tmp_path / "cache.json"
+    cache = _seed_cache(path, [dict(D=256, M_bucket=65536, state_rows=128,
+                                    windowed=False, chunked=True,
+                                    tile_m=MAX_AUTO_TILE)])
+    key = next(iter(cache.entries))
+    # the model says this tile overflows the budget for this geometry
+    assert tile_vmem_bytes(256, MAX_AUTO_TILE, 128, False,
+                           True) > VMEM_BUDGET_BYTES
+    assert lookup_tile(D=256, M=65536, state_rows=128, windowed=False,
+                       chunked=True, path=str(path)) is None
+    # non-LANE tile (hand-edited) likewise
+    cache.entries[key]["tile_m"] = 100
+    cache.entries[key]["D"] = 16
+    cache.entries[key]["state_rows"] = 8
+    cache.save()
+    assert lookup_tile(D=16, M=65536, state_rows=8, windowed=False,
+                       chunked=True, path=str(path)) is None
+
+
+def _check_bucket_lookup_safe(path, D, M, R, windowed, chunked):
+    tm = lookup_tile(D=D, M=M, state_rows=R, windowed=windowed,
+                     chunked=chunked, path=str(path))
+    if tm is not None:
+        assert tm % LANE == 0 and LANE <= tm <= MAX_AUTO_TILE
+        assert tile_vmem_bytes(D, tm, R, windowed, chunked) \
+            <= VMEM_BUDGET_BYTES
+
+
+def test_nearest_bucket_never_over_budget_seeded(tmp_path):
+    """Whatever mix of sane and hand-mangled entries the cache holds,
+    a lookup returns an in-budget LANE tile or None — never anything
+    the VMEM model rejects."""
+    rng = random.Random(2)
+    path = tmp_path / "cache.json"
+    cache = AutotuneCache(str(path), {})
+    device = device_fingerprint()
+    for i in range(40):
+        D = rng.choice((8, 16, 64, 256))
+        entry = dict(
+            D=D, M_bucket=1 << rng.randrange(7, 18),
+            state_rows=rng.choice((8, 16, 128)),
+            windowed=rng.random() < 0.5, chunked=rng.random() < 0.5,
+            tile_m=rng.choice((100, 128, 512, 4096, MAX_AUTO_TILE,
+                               2 * MAX_AUTO_TILE)),
+        )
+        cache.put(interpret=True, best_us=1.0,
+                  candidates={entry["tile_m"]: 1.0}, device=device, **entry)
+    cache.save()
+    for _ in range(200):
+        _check_bucket_lookup_safe(
+            path, rng.choice((8, 16, 64, 256)), rng.randrange(1, 1 << 18),
+            rng.choice((8, 16, 128)), rng.random() < 0.5,
+            rng.random() < 0.5)
+
+
+def test_candidate_tiles_prefiltered_by_model():
+    """Sweep candidates are exactly the in-budget pow2 LANE multiples,
+    so the tuner cannot persist an over-budget geometry to begin with."""
+    for (D, R, windowed, chunked) in [(16, 8, False, False),
+                                      (64, 16, True, True),
+                                      (256, 128, False, True)]:
+        tiles = candidate_tiles(D, R, windowed, chunked, 1 << 16)
+        for t in tiles:
+            assert t % LANE == 0 and t & (t - 1) == 0
+            assert tile_vmem_bytes(D, t, R, windowed, chunked) \
+                <= VMEM_BUDGET_BYTES
+    # limit keeps the widest N
+    assert candidate_tiles(16, 8, False, False, 1 << 12, limit=2) == \
+        candidate_tiles(16, 8, False, False, 1 << 12)[-2:]
+
+
+# ---------------------------------------------------------------------------
+# decide(): the full auto ladder end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_decide_auto_prefers_cache_then_model(tmp_path, monkeypatch):
+    """With a small budget, D=16/M=4096/R=8 is past resident; the model
+    picks 256 but a cached measurement of 128 must win — and with the
+    cache gone, the model's 256 is the fallback."""
+    budget = 1 << 17
+    policy = TilePolicy(tile_m="auto", vmem_budget_bytes=budget)
+    assert policy.auto_tile(16, 8, False, False) == 256
+
+    path = tmp_path / "cache.json"
+    _seed_cache(path, [dict(D=16, M_bucket=4096, state_rows=8,
+                            windowed=False, chunked=False, tile_m=128)])
+    monkeypatch.setenv("DPP_AUTOTUNE_CACHE", str(path))
+    assert policy.decide(16, 4096, 8, False, False) == ("tiled", 128)
+
+    monkeypatch.setenv("DPP_AUTOTUNE_CACHE", str(tmp_path / "absent.json"))
+    assert policy.decide(16, 4096, 8, False, False) == ("tiled", 256)
+
+    # resident-when-it-fits is unchanged by auto mode
+    assert policy.decide(16, 512, 8, False, False) == ("resident", None)
+
+
+def test_decide_auto_records_telemetry(tmp_path, monkeypatch):
+    path = tmp_path / "cache.json"
+    _seed_cache(path, [dict(D=16, M_bucket=4096, state_rows=8,
+                            windowed=False, chunked=False, tile_m=128)])
+    monkeypatch.setenv("DPP_AUTOTUNE_CACHE", str(path))
+    policy = TilePolicy(tile_m="auto", vmem_budget_bytes=1 << 17)
+    with obs.session(obs.ObsConfig(enabled=True)):
+        reg = obs.registry()
+        policy.decide(16, 4096, 8, False, False)   # exact hit
+        policy.decide(16, 9000, 8, False, False)   # bucket 16384 -> nearest
+        monkeypatch.setenv("DPP_AUTOTUNE_CACHE",
+                           str(tmp_path / "absent.json"))
+        policy.decide(16, 4096, 8, False, False)       # miss -> model
+        hits = reg.counter("autotune_cache_hits_total")
+        misses = reg.counter("autotune_cache_misses_total")
+        assert hits.value(kind="exact") == 1
+        assert hits.value(kind="bucket") == 1
+        assert misses.value(reason="empty") == 1
+        assert reg.gauge("autotune_tile_m").value() == 128
+
+
+# ---------------------------------------------------------------------------
+# tile_m precedence (env > explicit > auto > model; policy bypasses)
+# ---------------------------------------------------------------------------
+
+
+def test_precedence_env_beats_explicit(monkeypatch):
+    monkeypatch.setenv("DPP_TILE_M", "256")
+    assert _resolve_tile_policy(384, None).tile_m == 256
+    assert _resolve_tile_policy("auto", None).tile_m == 256
+    assert _resolve_tile_policy(None, None).tile_m == 256
+
+
+def test_precedence_env_auto(monkeypatch):
+    monkeypatch.setenv("DPP_TILE_M", "auto")
+    assert _resolve_tile_policy(None, None).tile_m == "auto"
+    assert _resolve_tile_policy(384, None).tile_m == "auto"
+
+
+def test_precedence_policy_object_bypasses_env(monkeypatch):
+    monkeypatch.setenv("DPP_TILE_M", "256")
+    policy = TilePolicy(tile_m=384)
+    assert _resolve_tile_policy(None, policy) is policy
+
+
+def test_precedence_without_env(monkeypatch):
+    monkeypatch.delenv("DPP_TILE_M", raising=False)
+    assert _resolve_tile_policy(384, None).tile_m == 384
+    assert _resolve_tile_policy("auto", None).tile_m == "auto"
+    assert _resolve_tile_policy(None, None).tile_m is None
+
+
+def test_precedence_rejects_both_knobs():
+    with pytest.raises(ValueError, match="at most one"):
+        _resolve_tile_policy(128, TilePolicy())
+
+
+def test_env_garbage_fails_loudly(monkeypatch):
+    monkeypatch.setenv("DPP_TILE_M", "fast")
+    with pytest.raises(ValueError, match="DPP_TILE_M"):
+        _resolve_tile_policy(None, None)
+    monkeypatch.setenv("DPP_TILE_M", "100")  # not a LANE multiple
+    with pytest.raises(ValueError, match="tile_m"):
+        _resolve_tile_policy(None, None)
+
+
+def test_precedence_override_telemetry(monkeypatch):
+    monkeypatch.setenv("DPP_TILE_M", "256")
+    with obs.session(obs.ObsConfig(enabled=True)):
+        reg = obs.registry()
+        _resolve_tile_policy(384, None)
+        _resolve_tile_policy("auto", None)
+        over = reg.counter("dpp_tile_override_total")
+        assert over.value(winner="env", lost="explicit") == 1
+        assert over.value(winner="env", lost="auto") == 1
+        assert reg.counter("dpp_tile_source_total").value(source="env") == 2
+
+
+# ---------------------------------------------------------------------------
+# "auto" validation across the config surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_validate_tile_m_auto_gating():
+    validate_tile_m("auto", allow_auto=True)
+    with pytest.raises(ValueError, match="single-device Pallas dispatch"):
+        validate_tile_m("auto")
+    for bad in ("fast", 100, True, 0, -128):
+        with pytest.raises(ValueError, match="tile_m"):
+            validate_tile_m(bad, allow_auto=True)
+
+
+def test_greedy_spec_auto_needs_pallas_backend():
+    GreedySpec(k=4, backend="pallas", tile_m="auto")  # fine
+    with pytest.raises(GreedySpecError, match="autotune cache"):
+        GreedySpec(k=4, backend="jnp", tile_m="auto")
+    with pytest.raises(GreedySpecError, match="autotune cache"):
+        GreedySpec(k=4, backend="auto", tile_m="auto")
+
+
+def test_rerank_config_auto_needs_kernel():
+    DPPRerankConfig(use_kernel=True, tile_m="auto")  # fine
+    with pytest.raises(ValueError, match="use_kernel"):
+        DPPRerankConfig(tile_m="auto")
+
+
+# ---------------------------------------------------------------------------
+# The real sweep (tiny geometry) and cache hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_run_sweep_writes_validating_cache(tmp_path):
+    path = str(tmp_path / "cache.json")
+    cases = [SweepCase("step_exact", D=16, M=256, state_rows=8)]
+    results, out = run_sweep(cases, trials=1, limit=1, path=path)
+    assert out == path and len(results) == 1
+    r = results[0]
+    assert r["tile_m"] % LANE == 0 and r["best_us"] > 0
+
+    # the persisted winner round-trips through the lookup ladder
+    assert lookup_tile(D=16, M=256, state_rows=8, windowed=False,
+                       chunked=False, path=path) == r["tile_m"]
+
+    # and passes the repro.analysis cache validator clean
+    from repro.analysis.kernels import check_autotune_cache
+    findings, summary = check_autotune_cache(path)
+    assert findings == []
+    assert summary["entries"] == summary["checked"] == 1
+
+    # a second sweep merges (same key overwritten, file still valid)
+    run_sweep(cases, trials=1, limit=1, path=path)
+    doc = json.loads(open(path, encoding="utf-8").read())
+    assert len(doc["entries"]) == 1
+
+
+def test_run_sweep_replaces_corrupt_cache(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("{not json", encoding="utf-8")
+    cases = [SweepCase("step_exact", D=16, M=256, state_rows=8)]
+    results, _ = run_sweep(cases, trials=1, limit=1, path=str(path))
+    assert len(results) == 1
+    doc = json.loads(path.read_text(encoding="utf-8"))
+    assert doc["schema"] == 1 and len(doc["entries"]) == 1
+
+
+def test_cache_paths(monkeypatch, tmp_path):
+    monkeypatch.setenv("DPP_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+    assert active_cache_path() == str(tmp_path / "c.json")
+    monkeypatch.delenv("DPP_AUTOTUNE_CACHE", raising=False)
+    assert active_cache_path() == default_cache_path()
+    monkeypatch.setenv("XDG_CACHE_HOME", str(tmp_path / "xdg"))
+    assert default_cache_path() == str(
+        tmp_path / "xdg" / "repro" / "dpp_autotune.json")
+
+
+def test_sweep_case_rejects_unknown_family():
+    with pytest.raises(ValueError, match="unknown family"):
+        SweepCase("warp_drive", D=16, M=256, state_rows=8)

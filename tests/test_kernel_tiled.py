@@ -35,9 +35,11 @@ from repro.kernels.dpp_greedy import (
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-# extra tile width injected by the CI tiled-matrix job
+# extra tile width injected by the CI tiled-matrix job; non-numeric
+# values ("auto" in the autotune lane) name a policy mode, not a width
 _ENV_TILES = (
-    [int(os.environ["DPP_TILE_M"])] if os.environ.get("DPP_TILE_M") else []
+    [int(os.environ["DPP_TILE_M"])]
+    if os.environ.get("DPP_TILE_M", "").isdigit() else []
 )
 
 

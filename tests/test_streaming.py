@@ -48,7 +48,12 @@ from repro.core import (
 from repro.distributed.context import make_mesh_compat
 from repro.serving.reranker import DPPRerankConfig
 
-_ENV_TILE = int(os.environ["DPP_TILE_M"]) if os.environ.get("DPP_TILE_M") else None
+# the CI autotune lane sets DPP_TILE_M=auto — a policy mode, not a
+# width, so only digit values contribute an explicit tile here
+_ENV_TILE = (
+    int(os.environ["DPP_TILE_M"])
+    if os.environ.get("DPP_TILE_M", "").isdigit() else None
+)
 
 BACKENDS = ["jnp", "pallas_resident", "pallas_tiled", "sharded",
             "sharded_tiled"]
@@ -308,10 +313,14 @@ def test_fused_chunk_is_one_pallas_call(window):
     assert counts == {"flat": 1, "looped": 0}, counts
 
     # contrast: the per-step whole-slate tiled driver launches per step
-    from repro.kernels.dpp_greedy import dpp_greedy
+    # (explicit TilePolicy: the structural claim needs the tiled path
+    # even when a DPP_TILE_M override — e.g. "auto", which resolves
+    # these resident-size shapes to one flat launch — is in effect)
+    from repro.kernels.dpp_greedy import TilePolicy, dpp_greedy
 
     jaxpr_whole = jax.make_jaxpr(
-        lambda v: dpp_greedy(v, k, window=window, tile_m=128)
+        lambda v: dpp_greedy(v, k, window=window,
+                             tile_policy=TilePolicy(tile_m=128))
     )(V[None])
     whole_counts = pallas_call_structure(jaxpr_whole)
     assert whole_counts["looped"] >= 1, whole_counts
