@@ -160,6 +160,7 @@ def main() -> None:
         fig7_serving,
         fig8_observability,
         fig9_autotune,
+        fig10_session,
     )
 
     figures = [
@@ -181,6 +182,8 @@ def main() -> None:
          "recompile ledger", fig8_observability.main),
         ("fig9", "Figure 9: measured autotune cache vs the analytical "
          "VMEM model", fig9_autotune.main),
+        ("fig10", "Figure 10: session delta-resume vs full re-rerank "
+         "(latency, parity)", fig10_session.main),
     ]
     failed = [
         fig for fig, title, fn in figures

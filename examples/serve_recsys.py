@@ -2,8 +2,10 @@
 over batched requests (the paper's production scenario), followed by a
 streaming-emission demo — a long windowed feed served chunk by chunk
 through ``Reranker.stream`` instead of blocking on the whole slate —
-and a continuous-batching demo where heterogeneous live requests share
-one micro-batch through ``Reranker.submit``.
+a continuous-batching demo where heterogeneous live requests share
+one micro-batch through ``Reranker.submit``, and a session demo where
+one user's feed resumes the warm windowed state across scroll events
+(``Reranker.session``) and delta-updates when new candidates arrive.
 
   PYTHONPATH=src python examples/serve_recsys.py
 """
@@ -89,6 +91,60 @@ def router_demo():
           f"mean TTFC {st.mean_ttfc * 1e3:.1f} ms")
 
 
+def session_demo():
+    """Session-aware incremental rerank: one user scrolls a feed across
+    several requests while the candidate pool drifts.  ``rr.session``
+    keeps the windowed greedy state warm between scroll events — each
+    ``next_chunk`` resumes where the last stopped, and ``extend`` /
+    ``rescore`` delta-update only the affected columns instead of
+    re-running greedy over everything already shown."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.serving import (
+        DPPRerankConfig,
+        Reranker,
+        RerankRequest,
+        SessionConfig,
+    )
+
+    rng = np.random.default_rng(2)
+    M, D = 1500, 32
+    feats = rng.normal(size=(M, D)).astype(np.float32)
+    feats /= np.linalg.norm(feats, axis=1, keepdims=True)
+    rr = Reranker(
+        DPPRerankConfig(slate_size=18, shortlist=300, alpha=3.0,
+                        window=8, chunk_size=6, eps=1e-6),
+        session_config=SessionConfig(budget_bytes=64 << 20),
+    )
+    sess = rr.session(RerankRequest(
+        scores=jnp.asarray(rng.uniform(size=M).astype(np.float32)),
+        feats=jnp.asarray(feats),
+    ))
+    print("# session feed (window=8, 6 items per scroll):")
+    for event in range(2):
+        ids, gains = sess.next_chunk(6)
+        shown = " ".join(f"{int(i):4d}" for i in ids)
+        print(f"scroll {event}: [{shown}]  min marginal "
+              f"{float(np.min(gains)):.4f}")
+
+    # fresh candidates land mid-session; the next scroll conditions on
+    # everything already shown AND sees the new arrivals
+    dm = 200
+    sess.extend(
+        jnp.asarray(rng.uniform(size=dm).astype(np.float32) + 0.5),
+        jnp.asarray((lambda f: f / np.linalg.norm(f, axis=1, keepdims=True))(
+            rng.normal(size=(dm, D)).astype(np.float32)
+        )),
+    )
+    ids, gains = sess.next_chunk(6)
+    fresh = sum(1 for i in ids if int(i) >= M)
+    shown = " ".join(f"{int(i):4d}" for i in ids)
+    print(f"scroll 2 after extend(+{dm}): [{shown}]  "
+          f"({fresh} fresh candidates picked)")
+    print(f"shown so far: {len(sess.shown)} items")
+
+
 if __name__ == "__main__":
     main([
         "--arch", "deepfm", "--requests", "16", "--candidates", "2000",
@@ -96,3 +152,4 @@ if __name__ == "__main__":
     ])
     stream_demo()
     router_demo()
+    session_demo()

@@ -36,6 +36,7 @@ def run_analysis(
     findings: list[Finding] = []
     suppressions: dict[str, dict[int, set[str]]] = {}
     geometry_summaries: list[dict] = []
+    session_summaries: list[dict] = []
     skipped: list[str] = []
 
     for path in files:
@@ -57,6 +58,10 @@ def run_analysis(
                 if summary is not None:
                     summary["path"] = path
                     geometry_summaries.append(summary)
+                summary = jitgeo.session_geometry_summary(node)
+                if summary is not None:
+                    summary["path"] = path
+                    session_summaries.append(summary)
 
     kernel_summary: dict | None = None
     autotune_summary: dict | None = None
@@ -80,6 +85,7 @@ def run_analysis(
         "files": len(files),
         "skipped_syntax": skipped,
         "router_geometry": geometry_summaries,
+        "session_geometry": session_summaries,
         "kernel_contracts": kernel_summary,
         "autotune_cache": autotune_summary,
         "findings": len(findings),
@@ -153,6 +159,12 @@ def main(argv: list[str] | None = None) -> int:
             if geo.get("reachable_geometries") == 1:
                 tail += (f"; {geo['class']}: 1 reachable compiled "
                          f"geometry ({geo['launch_sites']} launch site)")
+        for geo in summary["session_geometry"]:
+            if geo.get("reachable_geometries") == 1:
+                fams = sum(1 for n in geo["launch_sites"].values() if n)
+                tail += (f"; {geo['class']}: 1 reachable compiled "
+                         f"geometry per (shape, chunk) "
+                         f"({fams} launch families)")
         print(tail)
         if args.verbose:
             print(json.dumps(summary, indent=2, default=str))

@@ -62,6 +62,12 @@ RULES: dict[str, str] = {
         "slot-chunk launch site — the single-compiled-geometry proof "
         "fails"
     ),
+    "session-geometry": (
+        "session compiled-geometry attribute written outside __init__, "
+        "or more than one launch site for a resume/extend/rescore "
+        "family — the session resume path could compile geometries "
+        "beyond (shape, chunk)"
+    ),
     # -- Pallas kernel contracts (kernels.py) ----------------------------
     "pallas-coverage-gap": (
         "a BlockSpec index_map never visits some block of its operand "

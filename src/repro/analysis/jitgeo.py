@@ -1,7 +1,7 @@
 """jit-geometry / recompile-hazard checker (rules jit-static-missing,
-jit-static-unhashable, router-geometry).
+jit-static-unhashable, router-geometry, session-geometry).
 
-Two jobs:
+Three jobs:
 
 1. **jit boundary hygiene** — every ``static_argnames`` entry must name
    a real parameter (a typo leaves the intended argument traced, which
@@ -17,6 +17,13 @@ Two jobs:
    guard.  With exactly one launch site and write-once geometry, every
    launch after warmup reuses the same compiled signature — the static
    counterpart of the fig8 ``jit_misses_after_warmup == 0`` gate.
+
+3. **session geometry proof** — the same property for the session
+   layer (the class calling ``greedy_state_extend``): the resume chunk
+   and the delta-update primitives may specialise only on (state
+   shape, chunk width, delta width); one launch site per family and
+   write-once geometry attributes prove a resumed session never
+   recompiles beyond those axes.
 """
 from __future__ import annotations
 
@@ -36,6 +43,14 @@ from repro.analysis.findings import Finding
 CHUNK_LAUNCH = "greedy_chunk_slots"
 STATE_INIT = "greedy_slots_init"
 
+# the session layer's launch families: the resume chunk and the two
+# delta-update primitives.  greedy_state_extend is the marker — only
+# the session class calls it (greedy_chunk alone is also the plain
+# streaming path)
+SESSION_MARKER = "greedy_state_extend"
+SESSION_LAUNCHES = ("greedy_chunk", "greedy_state_extend",
+                    "greedy_state_rescore")
+
 _ARRAYISH = ("ndarray", "Array", "jnp.", "jax.")
 _UNHASHABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
                         ast.DictComp, ast.SetComp)
@@ -51,6 +66,12 @@ def check_module(path: str, tree: ast.Module) -> list[Finding]:
                 for line, message in summary["violations"]:
                     findings.append(
                         Finding(path, line, "router-geometry", message)
+                    )
+            summary = session_geometry_summary(node)
+            if summary is not None:
+                for line, message in summary["violations"]:
+                    findings.append(
+                        Finding(path, line, "session-geometry", message)
                     )
     return findings
 
@@ -208,6 +229,68 @@ def router_geometry_summary(cls: ast.ClassDef) -> Optional[dict]:
         "launch_sites": len(launches),
         "geometry_attrs": sorted(geometry),
         "lazy_attrs": sorted(lazy),
+        "violations": violations,
+        "reachable_geometries": 1 if not violations else None,
+    }
+
+
+def session_geometry_summary(cls: ast.ClassDef) -> Optional[dict]:
+    """Prove (or refute) that a session class's resume path reaches no
+    compiled geometry beyond (state shape, chunk).
+
+    Fires on any class calling ``greedy_state_extend`` (the session
+    marker — only the session layer delta-updates a resumable state).
+    The resume chunk and the two delta primitives jit-specialize on the
+    state/operand shapes, the chunk width and the delta width; every
+    *other* knob reaching a launch must therefore be an attribute
+    written exactly once, in ``__init__``, and each launch family must
+    have exactly one call site.  Underscore launch arguments are the
+    mutable device state (``_state`` / ``_V``) — rewritten every call
+    (and dropped/rebuilt by the LRU store), but always inside the
+    geometry pinned at construction.
+
+    Returns None for classes without the marker, else a dict like
+    :func:`router_geometry_summary` (``launch_sites`` maps family ->
+    count; ``reachable_geometries`` is 1 per (shape, chunk) when the
+    proof holds).
+    """
+    if not _calls_named(cls, SESSION_MARKER):
+        return None
+
+    violations: list[tuple[int, str]] = []
+    geometry: set[str] = set()
+    sites: dict[str, int] = {}
+    for family in SESSION_LAUNCHES:
+        calls = _calls_named(cls, family)
+        sites[family] = len(calls)
+        for call in calls[1:]:
+            violations.append((
+                call.lineno,
+                f"{len(calls)} {family} launch sites in class {cls.name} "
+                f"— a second site can carry a second compiled geometry; "
+                f"route every {family.split('_')[-1]} through one",
+            ))
+        for call in calls:
+            for arg in call.args + [kw.value for kw in call.keywords]:
+                attr = _self_attr(arg)
+                if attr is not None and not attr.startswith("_"):
+                    geometry.add(attr)
+
+    writes = _attr_writes(cls)
+    for attr in sorted(geometry):
+        for line, where, guarded_by in writes.get(attr, []):
+            if where != "__init__":
+                violations.append((
+                    line,
+                    f"session geometry attribute self.{attr} written "
+                    f"outside __init__ (in {where}) — a resume after the "
+                    f"write could carry a new compiled signature",
+                ))
+
+    return {
+        "class": cls.name,
+        "launch_sites": sites,
+        "geometry_attrs": sorted(geometry),
         "violations": violations,
         "reachable_geometries": 1 if not violations else None,
     }

@@ -263,6 +263,173 @@ def greedy_step(spec, state: GreedyState, *, L=None, V=None):
 
 
 # ---------------------------------------------------------------------------
+# Session delta updates — recondition a windowed state on a pool delta
+# ---------------------------------------------------------------------------
+#
+# A windowed state is fully determined by the pool ``V``, the last-w
+# shown ids and the dead set (shown + masked): ``d2_i = L_ii -
+# ||C[:, i]||^2`` for live i, and ``C[:, i] = V_W^{-1} L_{W, i}``
+# depends only on the *window* columns of V.  So when a block of
+# candidate columns is appended or overwritten, only that block's C
+# columns and d2 entries change — everything else (the ring rows for
+# shown items, every untouched column) is already correct.  The block
+# is re-solved against the window factor directly: ``C[:, win]`` IS
+# ``V_W`` (lower-triangular — column ``win[r]`` of C carries zeros
+# above row r, see ``repro.core.windowed``), so one (w, w) gather plus
+# one triangular solve reconditions dM columns in O(w^2 + w*dM*D) —
+# never O(k * M) like a from-scratch rerun.
+
+
+def _delta_cols(V, C, d2, win, start, V_blk, mask_blk, keep_dead: bool):
+    """Recompute C/d2 for pool columns ``[start, start + dM)`` after
+    writing ``V_blk`` there.  Unbatched leaves: V (D*, M*), C (w, M*),
+    d2 (M*,), win (w,).  ``keep_dead`` preserves dead columns (d2 at
+    -inf: shown, masked, padding) bit-for-bit — the rescore contract."""
+    D, _ = V.shape
+    w = C.shape[0]
+    dtype = C.dtype
+    dm = V_blk.shape[1]
+    ids = jnp.clip(win, 0)
+    valid = win >= 0
+
+    # The window's lower-triangular Cholesky factor, read off C itself;
+    # empty ring slots become identity rows so the solve is a no-op there.
+    Vw = jnp.where(valid[:, None], C[:, ids].T, jnp.eye(w, dtype=dtype))
+    # b[r] = L_{win[r], blk} from the (unchanged) window columns of V
+    b = jnp.where(valid[:, None], V[:, ids].T @ V_blk, 0.0)
+    c = jax.scipy.linalg.solve_triangular(Vw, b, lower=True)  # (w, dm)
+    diag_blk = jnp.sum(V_blk * V_blk, axis=0)
+    d2_blk = jnp.where(mask_blk, diag_blk - jnp.sum(c * c, axis=0), NEG_INF)
+
+    if keep_dead:
+        oldV = jax.lax.dynamic_slice(V, (0, start), (D, dm))
+        oldC = jax.lax.dynamic_slice(C, (0, start), (w, dm))
+        oldd = jax.lax.dynamic_slice(d2, (start,), (dm,))
+        dead = jnp.isneginf(oldd)
+        V_blk = jnp.where(dead[None, :], oldV, V_blk)
+        c = jnp.where(dead[None, :], oldC, c)
+        d2_blk = jnp.where(dead, oldd, d2_blk)
+
+    V = jax.lax.dynamic_update_slice(V, V_blk.astype(V.dtype), (0, start))
+    C = jax.lax.dynamic_update_slice(C, c.astype(dtype), (0, start))
+    d2 = jax.lax.dynamic_update_slice(d2, d2_blk.astype(d2.dtype), (start,))
+    return V, C, d2
+
+
+@partial(jax.jit, static_argnames=("keep_dead",))
+def _delta_update(V, C, d2, win, start, V_blk, mask_blk, *, keep_dead: bool):
+    return _delta_cols(V, C, d2, win, start, V_blk, mask_blk, keep_dead)
+
+
+@partial(jax.jit, static_argnames=("keep_dead",))
+def _delta_update_b1(V, C, d2, win, start, V_blk, mask_blk, *, keep_dead: bool):
+    # batched single-lane leaves (the Pallas stream layout, B == 1)
+    V, C1, d21 = _delta_cols(
+        V, C[0], d2[0], win[0], start, V_blk, mask_blk, keep_dead
+    )
+    return V, C1[None], d21[None]
+
+
+def _state_delta(spec, state, V, start, V_new, mask_new, keep_dead, op):
+    if spec.sharded():
+        raise NotImplementedError(
+            f"{op} is not implemented for sharded states: the window ring "
+            f"lives sharded behind shard_map and a column delta crosses "
+            f"device boundaries.  Lands with the ROADMAP 'Router scale-up' "
+            f"item (sharded slot batches + window heterogeneity); until "
+            f"then re-rank sharded pools from scratch."
+        )
+    if state.win.shape[-1] == 0:
+        raise ValueError(
+            f"{op} needs a windowed state (cfg.window < slate_size): the "
+            f"exact C (M, k) layout does not expose the conditioning "
+            f"window, so a column delta cannot be re-solved in O(w*dM)"
+        )
+    if V_new.ndim != 2:
+        raise ValueError(f"{op}: V_new must be (D, dM), got ndim={V_new.ndim}")
+    dm = V_new.shape[1]
+    M = V.shape[-1]
+    if V_new.shape[0] > V.shape[0]:
+        raise ValueError(
+            f"{op}: V_new has D={V_new.shape[0]} rows but the pool operand "
+            f"carries D={V.shape[0]}"
+        )
+    if isinstance(start, int):
+        if start < 0 or start + dm > M:
+            raise ValueError(
+                f"{op}: block [{start}, {start + dm}) exceeds the pool's "
+                f"{M} columns — size the session capacity up front"
+            )
+    if mask_new is None:
+        mask_new = jnp.ones((dm,), bool)
+    V_blk = V_new.astype(V.dtype)
+    if V_blk.shape[0] < V.shape[0]:  # Pallas row padding (Dp >= D)
+        V_blk = jnp.pad(V_blk, ((0, V.shape[0] - V_blk.shape[0]), (0, 0)))
+    start = jnp.asarray(start, jnp.int32)
+    if spec.backend == "pallas":
+        if state.C.ndim != 3 or state.C.shape[0] != 1:
+            raise ValueError(
+                f"{op} takes a single-request Pallas stream state "
+                f"(leading batch axis 1); slot-batched delta updates land "
+                f"with the ROADMAP 'Router scale-up' item"
+            )
+        V2, C2, d22 = _delta_update_b1(
+            V, state.C, state.d2, state.win, start, V_blk, mask_new,
+            keep_dead=keep_dead,
+        )
+    else:
+        V2, C2, d22 = _delta_update(
+            V, state.C, state.d2, state.win, start, V_blk, mask_new,
+            keep_dead=keep_dead,
+        )
+    # a delta can revive a stopped session: new/raised columns may now
+    # clear the eps gate, so the latch re-arms and re-evaluates.  The
+    # revived resume must condition on the *live* ring: a stopped chunk
+    # advances t past the last real pick (its aborted steps revert
+    # C/win but not the step counter), and a stale t >= w would evict a
+    # window item that was never followed by a pick.  Ring occupancy is
+    # the true pick count below w, and any t >= w is behaviorally
+    # equivalent once the ring is full — so re-derive t from the ring.
+    t2 = jnp.sum(state.win >= 0).astype(jnp.int32)
+    new_state = GreedyState(
+        t2, jnp.zeros_like(state.stopped), C2, d22, state.win
+    )
+    return new_state, V2
+
+
+def greedy_state_extend(spec, state: GreedyState, V, start, V_new, mask_new=None):
+    """Append ``dM`` candidate columns at ``start`` of the pool operand.
+
+    Writes ``V_new (D, dM)`` into columns ``[start, start + dM)`` of
+    ``V``, re-solves exactly those columns' Cholesky state against the
+    session's current window and returns ``(state', V')`` — O(w * dM),
+    independent of how many steps the state has already taken.  The
+    target region is overwritten blind (it is the caller's padding /
+    retired region); ``mask_new`` marks which of the new columns are
+    selectable.  ``start`` may be a host int (bounds-checked) or traced;
+    the block width ``dM`` is static — one compile per distinct width.
+    Windowed states only; sharded raises ``NotImplementedError``.
+    """
+    return _state_delta(
+        spec, state, V, start, V_new, mask_new, False, "greedy_state_extend"
+    )
+
+
+def greedy_state_rescore(spec, state: GreedyState, V, start, V_new, mask_new=None):
+    """Overwrite ``dM`` *existing* columns with refreshed vectors.
+
+    Same geometry and cost as :func:`greedy_state_extend`, with one
+    contract change: dead columns (d2 at -inf — already shown, masked
+    out, or padding) keep their exact old V/C/d2 bits, so the shown
+    history and the window factor are never rewritten by a score
+    refresh.  ``mask_new`` False additionally retires a live column.
+    """
+    return _state_delta(
+        spec, state, V, start, V_new, mask_new, True, "greedy_state_rescore"
+    )
+
+
+# ---------------------------------------------------------------------------
 # Slot-batched execution — the continuous-batching substrate
 # ---------------------------------------------------------------------------
 #
@@ -285,7 +452,7 @@ def greedy_step(spec, state: GreedyState, *, L=None, V=None):
 # numerical risk while occupied neighbours compute.
 
 
-def greedy_slot_state(spec, V, mask=None) -> GreedyState:
+def greedy_slot_state(spec, V, mask=None, dtype=None) -> GreedyState:
     """Single-request state in ``spec``'s slot layout.
 
     ``spec.k`` is the slot *capacity* (the router's ``max_slate``), not
@@ -293,7 +460,13 @@ def greedy_slot_state(spec, V, mask=None) -> GreedyState:
     geometry so states splice into any slot; a request simply stops
     consuming after its own ``k`` selections.  ``V (D, M)`` must already
     be padded to the router's bucket width (mask False over padding).
+    ``dtype`` casts ``V`` first so the state's C/d2 leaves match the
+    slot batch it will be spliced into (``state_splice`` casts leaf-wise
+    — building the state in the wrong precision and upcasting later is
+    NOT the same bits); the Pallas kernels compute in f32 regardless.
     """
+    if dtype is not None:
+        V = V.astype(dtype)
     if spec.sharded():
         from repro.core.sharded import dpp_greedy_sharded_stream_init
 
@@ -327,7 +500,7 @@ def slot_pad_v(spec, V, state):
     return V
 
 
-def greedy_slots_init(spec, slots: int, D: int, M: int):
+def greedy_slots_init(spec, slots: int, D: int, M: int, dtype=jnp.float32):
     """Parked S-slot batch state + its zeroed V operand.
 
     Returns ``(state, V_slots)``: every slot is parked (``stopped``,
@@ -335,10 +508,13 @@ def greedy_slots_init(spec, slots: int, D: int, M: int):
     geometry — admit requests with :func:`state_splice`, free slots with
     :func:`state_evict`.  ``M`` is the router's padded bucket width and
     ``spec.k`` the per-slot capacity (see :func:`greedy_slot_state`).
+    ``dtype`` is the resident V/C/d2 element type — it must match the
+    lanes that will be spliced in, or ``state_splice``'s leaf-wise
+    ``astype`` silently rounds every bf16/f64 request through it.
     """
     if slots < 1:
         raise ValueError(f"slots must be >= 1, got {slots}")
-    Vz = jnp.zeros((D, M), jnp.float32)
+    Vz = jnp.zeros((D, M), dtype)
     single = greedy_slot_state(spec, Vz, mask=jnp.zeros((M,), bool))
     single = single._replace(stopped=jnp.asarray(True))
     state = jax.tree_util.tree_map(

@@ -225,6 +225,40 @@ def dpp_greedy_windowed_lowrank_batch(
     return jax.vmap(fn)(V, mask)
 
 
+@jax.jit
+def windowed_state_rebuild(V, shown, dead):
+    """Rebuild the incremental ring state ``(C, d2)`` from history alone.
+
+    A windowed state is a pure function of the pool ``V (D, M)``, the
+    last ``w`` shown pool columns (``shown (w,)`` int32, oldest first,
+    -1-padded at the tail) and the dead set (``dead (M,)`` bool — every
+    ever-shown or masked-out column, padding included).  The window's
+    Gram is PD without jitter (every pick cleared the eps gate, so the
+    incremental factor's diagonal is >= eps), and the Cholesky factor
+    is unique — so this rebuild lands on the same ``C (w, M)`` rows the
+    incremental path reached, up to rounding (~1 ulp).
+
+    This is the session layer's eviction-repair: a session dropped from
+    the LRU byte budget is rebuilt bit-compatibly from its host-side
+    history the next time it is touched (``repro.serving.session``).
+    """
+    dtype = V.dtype
+    w = shown.shape[0]
+    ids = jnp.clip(shown, 0)
+    valid = shown >= 0
+    Vwin = jnp.where(valid[:, None], V[:, ids].T, 0.0)  # (w, D) rows
+    eye = jnp.eye(w, dtype=dtype)
+    vm = valid[:, None] & valid[None, :]
+    Lw = jnp.where(vm, Vwin @ Vwin.T, eye)
+    F = jnp.linalg.cholesky(Lw)
+    Lwi = Vwin @ V  # (w, M); zero rows at empty ring slots
+    C = jax.scipy.linalg.solve_triangular(F, Lwi, lower=True)
+    C = jnp.where(valid[:, None], C, 0.0)
+    d2 = jnp.sum(V * V, axis=0) - jnp.sum(C * C, axis=0)
+    d2 = jnp.where(dead, NEG_INF, d2)
+    return C, d2
+
+
 @partial(jax.jit, static_argnames=("k", "window", "eps"))
 def dpp_greedy_windowed_rebuild(
     L: jnp.ndarray,

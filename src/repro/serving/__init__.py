@@ -17,6 +17,7 @@ from repro.serving.router import (
     RouterStats,
     SlateHandle,
 )
+from repro.serving.session import RerankSession, SessionConfig, SessionStore
 
 __all__ = [
     "DPPRerankConfig",
@@ -24,7 +25,10 @@ __all__ = [
     "Reranker",
     "RerankRequest",
     "RerankRouter",
+    "RerankSession",
     "RouterConfig",
     "RouterStats",
+    "SessionConfig",
+    "SessionStore",
     "SlateHandle",
 ]

@@ -107,6 +107,39 @@ class RerankRequest:
                     f"per-user (B, M); got mask ndim={m_nd} with scores "
                     f"ndim={s_nd}"
                 )
+        # one shared candidate axis M (and batch axis B) across all three
+        # operands — caught here, at construction, instead of surfacing as
+        # a shape error deep inside a jitted serve step
+        M = jnp.shape(self.scores)[-1]
+        f_shape = jnp.shape(self.feats)
+        if f_shape[-2] != M:
+            raise ValueError(
+                f"scores and feats disagree on the candidate count: scores "
+                f"carry M={M} candidates but feats "
+                f"{tuple(f_shape)} carry {f_shape[-2]} — every operand "
+                f"must share one M axis"
+            )
+        if s_nd == 2 and f_nd == 3 and f_shape[0] != jnp.shape(self.scores)[0]:
+            raise ValueError(
+                f"scores and feats disagree on the user batch: scores "
+                f"carry B={jnp.shape(self.scores)[0]} users but feats "
+                f"{tuple(f_shape)} carry {f_shape[0]}"
+            )
+        if self.mask is not None:
+            m_shape = jnp.shape(self.mask)
+            if m_shape[-1] != M:
+                raise ValueError(
+                    f"scores and mask disagree on the candidate count: "
+                    f"scores carry M={M} candidates but mask "
+                    f"{tuple(m_shape)} carries {m_shape[-1]} — every "
+                    f"operand must share one M axis"
+                )
+            if len(m_shape) == 2 and m_shape[0] != jnp.shape(self.scores)[0]:
+                raise ValueError(
+                    f"scores and mask disagree on the user batch: scores "
+                    f"carry B={jnp.shape(self.scores)[0]} users but mask "
+                    f"{tuple(m_shape)} carries {m_shape[0]}"
+                )
 
     @property
     def batched(self) -> bool:
@@ -129,7 +162,8 @@ class Reranker:
     recompile.
     """
 
-    def __init__(self, cfg: DPPRerankConfig, router_config=None):
+    def __init__(self, cfg: DPPRerankConfig, router_config=None,
+                 session_config=None):
         if not isinstance(cfg, DPPRerankConfig):
             raise TypeError(
                 f"Reranker takes a DPPRerankConfig, got {type(cfg).__name__}"
@@ -137,6 +171,8 @@ class Reranker:
         self.cfg = cfg
         self._router_config = router_config
         self._router = None
+        self._session_config = session_config
+        self._sessions = None
         if cfg.obs is not None:  # enabled=False configs are a no-op
             obs.enable(cfg.obs)
 
@@ -199,11 +235,12 @@ class Reranker:
         """Stream one request's slate as it is selected.
 
         Returns a generator of ``(indices (c,) int32 global ids,
-        d_hist (c,))`` chunks whose concatenation equals
-        ``rerank(req)`` exactly (same shortlist, same greedy
-        sequence); the last chunk is short when ``chunk`` does not
-        divide the slate.  ``chunk_size`` overrides
-        ``cfg.chunk_size``.
+        d_hist (c,))`` chunks whose concatenation is a prefix of
+        ``rerank(req)`` (same shortlist, same greedy sequence) covering
+        every real selection; the last chunk is short when ``chunk``
+        does not divide the slate, and once an eps-stop surfaces (a -1
+        tail slot) the generator ends instead of launching further
+        all--1 chunks.  ``chunk_size`` overrides ``cfg.chunk_size``.
 
         Preparation — validation, the top-C shortlist, the resumable
         greedy state, the kernel-operand padding — happens *here*, not
@@ -254,10 +291,51 @@ class Reranker:
                     st, sel, dh = greedy_chunk(spec, st, V=V, chunk_size=c)
                     if top_i is not None:
                         sel = jnp.where(sel >= 0, top_i[jnp.clip(sel, 0)], -1)
-                yield sel.astype(jnp.int32), dh
+                sel = sel.astype(jnp.int32)
+                yield sel, dh
                 done += c
+                # eps-stop latch: once a chunk's tail slot is -1 the state
+                # is stopped and every further chunk would be a dead
+                # dispatch emitting all -1s.  The yielded chunk is already
+                # materialized host-side by the consumer's inspection of
+                # it, so reading its last slot costs no extra device sync.
+                if done < cfg.slate_size and int(sel.reshape(-1)[-1]) < 0:
+                    break
 
         return emit()
+
+    # -- session-aware incremental rerank ----------------------------------
+
+    @property
+    def sessions(self):
+        """The session store (created lazily on first use; see
+        ``repro.serving.session``): per-user windowed greedy states kept
+        device-resident between scroll events under an LRU byte budget."""
+        if self._sessions is None:
+            from repro.serving.session import SessionConfig, SessionStore
+
+            self._sessions = SessionStore(
+                self.cfg, self._session_config or SessionConfig()
+            )
+        return self._sessions
+
+    def session(self, req: RerankRequest, sid=None, **kwargs):
+        """Open a :class:`~repro.serving.session.RerankSession` over one
+        request's shortlist: ``next_chunk(n)`` emits the next ``n``
+        items conditioned on everything the session has already shown
+        (never replaying selected steps), ``extend`` / ``rescore``
+        delta-update the candidate pool in O(w * dM), and the store
+        evicts cold sessions to ``session_config.budget_bytes``
+        (transparently rebuilt on the next touch).  ``sid`` names the
+        session (auto-assigned when None); calling again with an
+        existing ``sid`` resumes that session and ignores ``req``.
+        Requires a windowed config (``cfg.window < slate_size``);
+        single requests only.
+        """
+        req = self._as_request(req, kwargs)
+        if sid is not None and sid in self.sessions:
+            return self.sessions.get(sid)
+        return self.sessions.create(req, sid=sid, cfg=self._cfg_for(req))
 
     # -- continuous batching -----------------------------------------------
 

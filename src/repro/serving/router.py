@@ -174,12 +174,14 @@ class SlateHandle:
     eviction.  ``ttfc`` is the seconds from submit to the first chunk.
     """
 
-    def __init__(self, router: "RerankRouter", rid, k: int):
+    def __init__(self, router: "RerankRouter", rid, k: int,
+                 dtype=np.float32):
         self.rid = rid
         self.timed_out = False
         self.ttfc: Optional[float] = None
         self._router = router
         self._k = k
+        self._dt = np.dtype(dtype)
         self._done = False
         self._idx: List[np.ndarray] = []
         self._dh: List[np.ndarray] = []
@@ -205,9 +207,9 @@ class SlateHandle:
         )
         dh = (
             np.concatenate(self._dh) if self._dh
-            else np.zeros((0,), np.float32)
+            else np.zeros((0,), self._dt)
         )
-        return idx.astype(np.int32), dh.astype(np.float32)
+        return idx.astype(np.int32), dh.astype(self._dt)
 
     # router-side delivery ---------------------------------------------------
 
@@ -224,7 +226,7 @@ class SlateHandle:
             short = self._k - self.delivered
             if short > 0:
                 self._idx.append(np.full((short,), -1, np.int32))
-                self._dh.append(np.zeros((short,), np.float32))
+                self._dh.append(np.zeros((short,), self._dt))
         self.timed_out = timed_out
         self._done = True
 
@@ -286,6 +288,7 @@ class RerankRouter:
         self._state = None  # slot-batched GreedyState (lazy)
         self._V = None  # (S, D*, M*) stacked kernel operand (lazy)
         self._D: Optional[int] = None  # session feature dim (first submit)
+        self._dtype = None  # resident slot dtype (first submit)
         self._inflight = None  # (state, sel, dh) of the launched chunk
 
     # -- metrics -------------------------------------------------------------
@@ -367,6 +370,23 @@ class RerankRouter:
                 f"feature dim {D} != the session's {self._D} — one router "
                 f"serves one model"
             )
+        # the dtype the shortlist kernel will actually emit for these
+        # feats (f32 relevance weights promote bf16/f16 feats to f32;
+        # f64 survives under x64) — the resident slot batch must be
+        # built in it, or state_splice's leaf-wise astype silently
+        # rounds every lane through float32
+        feats_dt = getattr(req.feats, "dtype", None)
+        dt = np.result_type(
+            np.float32 if feats_dt is None else feats_dt, np.float32
+        )
+        if self._dtype is None:
+            self._dtype = dt
+        elif dt != self._dtype:
+            raise ValueError(
+                f"feats dtype maps to resident dtype {dt}, but the "
+                f"session serves {self._dtype} — one router serves one "
+                f"model (and one precision)"
+            )
         if len(self._queue) >= self.rcfg.max_queue:
             self._count("rejected")
             raise RouterQueueFull(
@@ -374,7 +394,7 @@ class RerankRouter:
                 f"or consume handles before resubmitting"
             )
         now = time.monotonic()
-        handle = SlateHandle(self, req.rid, k)
+        handle = SlateHandle(self, req.rid, k, dtype=self._dtype)
         live = _Live(
             req, handle, k, now,
             None if req.deadline is None else now + req.deadline,
@@ -412,8 +432,8 @@ class RerankRouter:
             pad = self.bucket - width
             V = jnp.pad(V, ((0, 0), (0, pad)))
             m = jnp.pad(m, (0, pad))  # padding is never selectable
-        single = greedy_slot_state(self.spec, V, mask=m)
-        return single, slot_pad_v(self.spec, V, single)
+        single = greedy_slot_state(self.spec, V, mask=m, dtype=self._dtype)
+        return single, slot_pad_v(self.spec, V.astype(self._dtype), single)
 
     def _admit(self, now: float):
         """FIFO admission into free slots; expired queued requests are
@@ -426,7 +446,8 @@ class RerankRouter:
                 continue
             if self._state is None:
                 self._state, self._V = greedy_slots_init(
-                    self.spec, self.rcfg.slots, self._D, self.bucket
+                    self.spec, self.rcfg.slots, self._D, self.bucket,
+                    dtype=self._dtype,
                 )
             slot = self._free.pop()
             single, V_lane = self._prep(live)
@@ -518,7 +539,7 @@ class RerankRouter:
                         ).astype(np.int32)
                     first = live.handle.ttfc is None
                     live.handle._deliver(
-                        idx, dh_np[slot, :consume].astype(np.float32),
+                        idx, dh_np[slot, :consume].astype(self._dtype),
                         time.monotonic(), live.submit_t,
                     )
                     if first and live.handle.ttfc is not None:

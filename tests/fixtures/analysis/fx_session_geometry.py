@@ -1,0 +1,48 @@
+"""Seeded violations: session-geometry (mutable resume geometry)."""
+
+
+class WobblySession:
+    def __init__(self, spec):
+        self.spec = spec
+        self._state = None
+        self._V = None
+
+    def next_chunk(self, n):
+        return greedy_chunk(  # noqa: F821
+            self.spec, self._state, self._V, chunk_size=n
+        )
+
+    def extend(self, V_new):
+        self.spec = rebuild_spec(self.spec)  # LINE: session-geometry write  # noqa: F821,E501
+        self._state, self._V = greedy_state_extend(  # noqa: F821
+            self.spec, self._state, self._V, 0, V_new
+        )
+
+    def extend_again(self, V_new):
+        return greedy_state_extend(  # LINE: session-geometry 2nd launch
+            self.spec, self._state, self._V, 0, V_new
+        )  # noqa: F821
+
+
+class SteadySession:
+    """Write-once geometry, one launch site per family: proves clean."""
+
+    def __init__(self, spec):
+        self.spec = spec
+        self._state = None
+        self._V = None
+
+    def next_chunk(self, n):
+        return greedy_chunk(  # noqa: F821
+            self.spec, self._state, self._V, chunk_size=n
+        )
+
+    def extend(self, V_new):
+        self._state, self._V = greedy_state_extend(  # noqa: F821
+            self.spec, self._state, self._V, 0, V_new
+        )
+
+    def rescore(self, start, V_blk):
+        self._state, self._V = greedy_state_rescore(  # noqa: F821
+            self.spec, self._state, self._V, start, V_blk
+        )

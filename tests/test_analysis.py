@@ -41,7 +41,7 @@ FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
 AST_RULES = {
     "trace-cast", "trace-pyif", "host-sync-hot", "obs-nonstatic",
     "dead-shim", "jit-static-missing", "jit-static-unhashable",
-    "router-geometry", "bad-suppression",
+    "router-geometry", "session-geometry", "bad-suppression",
 }
 KERNEL_RULES = {
     "pallas-coverage-gap", "pallas-block-divisibility",
@@ -64,6 +64,8 @@ GOLDEN = {
     ("fx_router_geometry.py", 13, "router-geometry"),
     ("fx_router_geometry.py", 20, "router-geometry"),
     ("fx_router_geometry.py", 26, "router-geometry"),
+    ("fx_session_geometry.py", 16, "session-geometry"),
+    ("fx_session_geometry.py", 22, "session-geometry"),
     ("fx_suppressed.py", 15, "bad-suppression"),
     ("fx_suppressed.py", 15, "trace-pyif"),
     ("fx_trace_cast.py", 9, "trace-cast"),
@@ -199,6 +201,34 @@ def test_corpus_router_summaries(corpus):
     assert by_class["WobblyRouter"]["reachable_geometries"] is None
     assert by_class["WobblyRouter"]["launch_sites"] == 2
     assert by_class["SteadyRouter"]["reachable_geometries"] == 1
+
+
+def test_session_geometry_proof():
+    src = ROOT / "src" / "repro" / "serving" / "session.py"
+    tree = ast.parse(src.read_text(), filename=str(src))
+    summaries = [s for s in (
+        jitgeo.session_geometry_summary(n) for n in ast.walk(tree)
+        if isinstance(n, ast.ClassDef)
+    ) if s is not None]
+    assert len(summaries) == 1
+    proof = summaries[0]
+    assert proof["class"] == "RerankSession"
+    assert proof["violations"] == []
+    assert proof["launch_sites"] == {
+        "greedy_chunk": 1,
+        "greedy_state_extend": 1,
+        "greedy_state_rescore": 1,
+    }
+    assert proof["reachable_geometries"] == 1
+
+
+def test_corpus_session_summaries(corpus):
+    _, summary = corpus
+    by_class = {s["class"]: s for s in summary["session_geometry"]}
+    assert by_class["WobblySession"]["reachable_geometries"] is None
+    assert by_class["WobblySession"]["launch_sites"]["greedy_state_extend"] == 2
+    assert by_class["SteadySession"]["reachable_geometries"] == 1
+    assert by_class["SteadySession"]["geometry_attrs"] == ["spec"]
 
 
 # --------------------------------------------------------------------------

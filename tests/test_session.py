@@ -1,0 +1,496 @@
+"""Session-aware incremental rerank (repro.serving.session) suite.
+
+The core guarantee is differential: a session's conditioned next chunk
+— after any interleaving of scroll events, pool extends and score
+refreshes — matches, index for index, an independently-derived
+from-scratch conditional greedy over the session's current pool and
+shown history (``ref_next_picks``: per pick, a fresh float64 Cholesky
+of the window's Gram plus a full candidate solve).  The device state is
+delta-updated in O(w * dM); the reference recomputes everything — so
+agreement proves both the resume path and the two delta primitives.
+
+Around it: LRU eviction is transparent (an evicted session rebuilds
+bit-compatibly and keeps matching a never-evicted control), hypothesis
+drives random scroll/extend/rescore interleavings, and the serving-seam
+regressions ride along — slot-state dtype threading (f64 router
+parity), construction-time shared-M validation, and the stream
+generator's post-eps-stop dead chunk dispatches.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core import map_relevance
+from repro.core.dispatch import GreedySpec
+from repro.core.streaming import (
+    greedy_init,
+    greedy_slot_state,
+    greedy_slots_init,
+    greedy_state_extend,
+    state_splice,
+)
+from repro.serving import (
+    DPPRerankConfig,
+    Reranker,
+    RerankRequest,
+    RouterConfig,
+    SessionConfig,
+)
+
+BACKENDS = ["jnp", "pallas"]
+
+
+def _cfg(backend="jnp", k=8, window=3, shortlist=32, chunk=3, eps=1e-3):
+    return DPPRerankConfig(
+        slate_size=k, shortlist=shortlist, alpha=3.0, window=window,
+        use_kernel=(backend == "pallas"), chunk_size=chunk, eps=eps,
+    )
+
+
+def _request(seed, M, D=8, masked=False):
+    rng = np.random.default_rng(seed)
+    f = rng.normal(size=(M, D)).astype(np.float32)
+    f /= np.maximum(np.linalg.norm(f, axis=1, keepdims=True), 1e-12)
+    s = rng.uniform(0.1, 1.0, size=M).astype(np.float32)
+    mask = None
+    if masked:
+        m = np.ones(M, bool)
+        m[rng.choice(M, size=M // 4, replace=False)] = False
+        mask = jnp.asarray(m)
+    return RerankRequest(scores=jnp.asarray(s), feats=jnp.asarray(f),
+                         mask=mask)
+
+
+def _delta(seed, dm, D=8):
+    """Extend payload: normalized feats (dm, D) + uniform scores."""
+    rng = np.random.default_rng(seed)
+    f = rng.normal(size=(dm, D)).astype(np.float32)
+    f /= np.maximum(np.linalg.norm(f, axis=1, keepdims=True), 1e-12)
+    s = rng.uniform(0.1, 1.0, size=dm).astype(np.float32)
+    return s, f
+
+
+def ref_next_picks(Vf, shown, dead, n, w, eps):
+    """From-scratch conditional greedy, independently derived.
+
+    Per pick: Cholesky the last-``w`` shown items' Gram (float64) and
+    solve every pool column against it — the O(k * w^2 * M) derivation
+    the session's O(n * w * M) resume must match.  Returns (pool
+    columns, sqrt-gains) with the same ``d2 <= eps^2`` stop gate the
+    incremental path latches on.
+    """
+    Vf = np.asarray(Vf, np.float64)
+    L = Vf.T @ Vf
+    shown = list(shown)
+    dead = np.asarray(dead, bool).copy()
+    picks, gains = [], []
+    for _ in range(n):
+        win = shown[-w:]
+        if win:
+            F = np.linalg.cholesky(L[np.ix_(win, win)])
+            Ci = np.linalg.solve(F, L[np.asarray(win), :])
+            d2 = np.diag(L) - np.sum(Ci * Ci, axis=0)
+        else:
+            d2 = np.diag(L).copy()
+        d2[dead] = -np.inf
+        j = int(np.argmax(d2))
+        if not d2[j] > eps * eps:
+            break
+        picks.append(j)
+        gains.append(np.sqrt(d2[j]))
+        shown.append(j)
+        dead[j] = True
+    return np.asarray(picks, np.int64), np.asarray(gains)
+
+
+def check_next_chunk(sess, n):
+    """Pull a chunk and assert it matches the from-scratch reference
+    over the session's (authoritative, host-mirrored) pool + history."""
+    Vf = sess._Vh.copy()
+    shown = list(sess._shown)
+    dead = sess._dead.copy()
+    ids, gains = sess.next_chunk(n)
+    cols, ref_g = ref_next_picks(Vf, shown, dead, n, sess.w, sess.cfg.eps)
+    np.testing.assert_array_equal(np.asarray(ids), sess._gid[cols])
+    np.testing.assert_allclose(np.asarray(gains), ref_g,
+                               rtol=3e-4, atol=1e-5)
+    return ids
+
+
+@pytest.fixture
+def fresh_obs():
+    obs.disable()
+    s = obs.enable(obs.ObsConfig(enabled=True))
+    yield s
+    obs.disable()
+
+
+# ---------------------------------------------------------------------------
+# Resume: session chunks == Reranker.stream, never replaying
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("window", [3, 5])
+def test_session_chunks_match_stream(backend, window):
+    cfg = _cfg(backend, k=8, window=window)
+    req = _request(7, 40)
+    ref_i, ref_d = [], []
+    for c, d in Reranker(cfg).stream(req):
+        ref_i.append(np.asarray(c))
+        ref_d.append(np.asarray(d))
+    ref_i, ref_d = np.concatenate(ref_i), np.concatenate(ref_d)
+
+    sess = Reranker(cfg).session(req)
+    got_i, got_d = [], []
+    for n in (3, 3, 2):
+        ids, gains = sess.next_chunk(n)
+        got_i.append(np.asarray(ids))
+        got_d.append(np.asarray(gains))
+    np.testing.assert_array_equal(np.concatenate(got_i), ref_i)
+    np.testing.assert_allclose(np.concatenate(got_d), ref_d,
+                               rtol=1e-5, atol=1e-6)
+    assert list(sess.shown) == list(ref_i)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_session_resume_matches_reference(backend):
+    sess = Reranker(_cfg(backend)).session(_request(11, 36, masked=True))
+    for n in (2, 3, 3):
+        check_next_chunk(sess, n)
+
+
+# ---------------------------------------------------------------------------
+# Delta-updates: extend / rescore condition the next chunk correctly
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_extend_conditions_next_chunk(backend):
+    sess = Reranker(_cfg(backend)).session(_request(3, 24))
+    check_next_chunk(sess, 3)
+    s, f = _delta(101, 6)
+    gids = sess.extend(s, f)
+    # fresh global ids, dense above the request's candidate count
+    np.testing.assert_array_equal(gids, np.arange(24, 30))
+    check_next_chunk(sess, 3)  # may (and should be free to) pick new ids
+    check_next_chunk(sess, 2)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_extend_with_mask(backend):
+    sess = Reranker(_cfg(backend)).session(_request(5, 24))
+    check_next_chunk(sess, 3)
+    s, f = _delta(55, 5)
+    mask = np.array([True, False, True, True, False])
+    gids = sess.extend(s, f, mask=mask)
+    ids = check_next_chunk(sess, 4)
+    assert not ({int(gids[1]), int(gids[4])} & set(int(i) for i in ids))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rescore_conditions_next_chunk(backend):
+    sess = Reranker(_cfg(backend)).session(_request(9, 28))
+    shown_before = list(check_next_chunk(sess, 3))
+    # refresh a mix of shown and unshown ids: shown columns must keep
+    # their exact old state (history is never rewritten), unshown ones
+    # re-enter the running with their new relevance
+    ids = np.asarray([shown_before[0], *sess._gid[10:14]], np.int64)
+    rng = np.random.default_rng(77)
+    sess.rescore(ids, rng.uniform(0.5, 1.0, size=ids.size).astype(np.float32))
+    assert list(sess.shown) == shown_before
+    check_next_chunk(sess, 3)
+    check_next_chunk(sess, 2)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_extend_revives_eps_stopped_session(backend):
+    # rank-2 pool: every candidate lives in a 2D feature subspace, so
+    # the third conditioned gain collapses below eps and the session
+    # latches stopped mid-chunk...
+    rng = np.random.default_rng(13)
+    basis = np.linalg.qr(rng.normal(size=(8, 2)))[0]
+    coef = rng.normal(size=(16, 2)).astype(np.float32)
+    f = (coef @ basis.T).astype(np.float32)
+    f /= np.maximum(np.linalg.norm(f, axis=1, keepdims=True), 1e-12)
+    s = rng.uniform(0.1, 1.0, size=16).astype(np.float32)
+    sess = Reranker(_cfg(backend)).session(
+        RerankRequest(scores=jnp.asarray(s), feats=jnp.asarray(f))
+    )
+    ids, gains = sess.next_chunk(3)
+    assert len(ids) == 2 and len(gains) == 2
+    # ...stopped sessions answer from the host, empty, no device work
+    ids2, _ = sess.next_chunk(3)
+    assert ids2.size == 0
+    # an extend with full-rank candidates revives it, conditioned on
+    # the two shown items
+    sd, fd = _delta(99, 4)
+    sess.extend(sd, fd)
+    ids3 = check_next_chunk(sess, 3)
+    assert ids3.size == 3
+
+
+def test_hypothesis_interleavings():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    op = st.one_of(
+        st.tuples(st.just("chunk"), st.integers(1, 3)),
+        st.tuples(st.just("extend"), st.integers(1, 4)),
+        st.tuples(st.just("rescore"), st.integers(1, 5)),
+    )
+
+    @hyp.settings(max_examples=12, deadline=None)
+    @hyp.given(ops=st.lists(op, min_size=3, max_size=8),
+               seed=st.integers(0, 2**20))
+    def run(ops, seed):
+        rr = Reranker(_cfg("jnp"),
+                      session_config=SessionConfig(capacity=80))
+        sess = rr.session(_request(seed % 997, 24))
+        rng = np.random.default_rng(seed)
+        for i, (kind, arg) in enumerate(ops):
+            if kind == "chunk":
+                check_next_chunk(sess, arg)
+            elif kind == "extend":
+                s, f = _delta(seed + i, arg)
+                sess.extend(s, f)
+            else:
+                live = sess._gid[sess._gid >= 0]
+                ids = rng.choice(live, size=min(arg, live.size),
+                                 replace=False)
+                sess.rescore(ids, rng.uniform(
+                    0.1, 1.0, size=ids.size).astype(np.float32))
+        check_next_chunk(sess, 2)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# LRU store: eviction is transparent, budget is respected
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_rebuild_matches_never_evicted_control():
+    reqA, reqB = _request(21, 32), _request(22, 32)
+    # budget of 1 byte: whichever session is being served evicts every
+    # other resident one
+    rr = Reranker(_cfg("jnp"),
+                  session_config=SessionConfig(budget_bytes=1))
+    ctl = Reranker(_cfg("jnp")).session(reqA)
+
+    sa = rr.session(reqA, sid="a")
+    ia1, da1 = sa.next_chunk(3)
+    sb = rr.session(reqB, sid="b")  # creating b evicts a
+    assert not sa.resident and sb.resident
+    sb.next_chunk(3)
+
+    # the evicted session rebuilds transparently and keeps matching a
+    # control that was never evicted — across a later extend too
+    ic1, dc1 = ctl.next_chunk(3)
+    np.testing.assert_array_equal(ia1, ic1)
+    ia2, da2 = sa.next_chunk(3)
+    ic2, dc2 = ctl.next_chunk(3)
+    np.testing.assert_array_equal(ia2, ic2)
+    np.testing.assert_allclose(da2, dc2, rtol=1e-5, atol=1e-6)
+    assert not sb.resident  # serving a evicted b right back
+
+    s, f = _delta(42, 5)
+    sa.extend(s, f)
+    ctl.extend(s, f)
+    ia3, _ = sa.next_chunk(2)
+    ic3, _ = ctl.next_chunk(2)
+    np.testing.assert_array_equal(ia3, ic3)
+    assert rr.sessions.resident_bytes() == sa._resident_bytes
+
+
+def test_eviction_emits_metrics(fresh_obs):
+    rr = Reranker(_cfg("jnp"),
+                  session_config=SessionConfig(budget_bytes=1))
+    sa = rr.session(_request(31, 24), sid="a")
+    sa.next_chunk(2)
+    rr.session(_request(32, 24), sid="b").next_chunk(2)
+    sa.next_chunk(2)  # touch the evicted session: rebuild delta
+    snap = fresh_obs.registry.snapshot()
+    assert sum(snap["counters"]["session_evictions_total"].values()) >= 1
+    assert sum(snap["counters"]["session_deltas_total"].values()) >= 1
+    assert "session_resident_bytes" in snap["gauges"]
+
+
+def test_store_close_and_sid_bookkeeping():
+    rr = Reranker(_cfg("jnp"))
+    req = _request(41, 24)
+    sess = rr.session(req, sid="u1")
+    # resuming by sid returns the same live session, ignoring req
+    assert rr.session(_request(42, 24), sid="u1") is sess
+    with pytest.raises(ValueError, match="already exists"):
+        rr.sessions.create(req, sid="u1")
+    a, b = rr.session(_request(43, 24)), rr.session(_request(44, 24))
+    assert a.sid != b.sid and len(rr.sessions) == 3
+    rr.sessions.close("u1")
+    assert "u1" not in rr.sessions and len(rr.sessions) == 2
+
+
+# ---------------------------------------------------------------------------
+# Pointed seams: configs and payloads that cannot work say why
+# ---------------------------------------------------------------------------
+
+
+def test_session_requires_windowed_config():
+    for bad in (_cfg("jnp", window=None), _cfg("jnp", k=8, window=8)):
+        with pytest.raises(ValueError, match="windowed config"):
+            Reranker(bad).session(_request(1, 24))
+
+
+def test_session_rejects_sharded_pools():
+    cfg = dataclasses.replace(_cfg("jnp"), mesh=object())
+    with pytest.raises(NotImplementedError, match="sharded"):
+        Reranker(cfg).session(_request(1, 24))
+
+
+def test_session_rejects_user_batches():
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.uniform(size=(2, 24)).astype(np.float32))
+    f = jnp.asarray(rng.normal(size=(24, 8)).astype(np.float32))
+    with pytest.raises(ValueError, match="one session per user"):
+        Reranker(_cfg("jnp")).session(RerankRequest(scores=s, feats=f))
+
+
+def test_extend_capacity_exhausted():
+    rr = Reranker(_cfg("jnp"), session_config=SessionConfig(capacity=1))
+    sess = rr.session(_request(2, 24))  # cap clamps up to the shortlist
+    s, f = _delta(1, 2)
+    with pytest.raises(ValueError, match="pool exhausted"):
+        sess.extend(s, f)
+
+
+def test_rescore_unknown_id():
+    sess = Reranker(_cfg("jnp")).session(_request(3, 24))
+    with pytest.raises(ValueError, match="unknown global id"):
+        sess.rescore(np.asarray([10**6]), np.asarray([0.5], np.float32))
+
+
+def test_delta_update_requires_windowed_state():
+    spec = GreedySpec(k=4, backend="jnp")  # exact Algorithm 1
+    V = jnp.asarray(np.random.default_rng(0).normal(size=(8, 16)),
+                    jnp.float32)
+    st = greedy_init(spec, V=V)
+    with pytest.raises(ValueError, match="windowed state"):
+        greedy_state_extend(spec, st, V, 0, V[:, :2])
+
+
+# ---------------------------------------------------------------------------
+# Seam regression: slot-state dtype threading (router, non-f32 models)
+# ---------------------------------------------------------------------------
+
+
+def test_slot_primitives_thread_dtype():
+    spec = GreedySpec(k=4, window=2, backend="jnp")
+    st, Vs = greedy_slots_init(spec, 2, 8, 32, dtype=jnp.bfloat16)
+    assert Vs.dtype == jnp.bfloat16
+    assert st.C.dtype == st.d2.dtype == jnp.bfloat16
+    V = jnp.asarray(np.random.default_rng(5).normal(size=(8, 32)),
+                    jnp.bfloat16)
+    single = greedy_slot_state(spec, V, dtype=jnp.bfloat16)
+    assert single.C.dtype == jnp.bfloat16
+    spliced = state_splice(st, single, 0)
+    assert spliced.C.dtype == jnp.bfloat16  # no silent f32 upcast
+
+
+def test_router_f64_parity():
+    if not jax.config.jax_enable_x64:
+        jax.config.update("jax_enable_x64", True)
+        restore = True
+    else:
+        restore = False
+    try:
+        rng = np.random.default_rng(8)
+        f = rng.normal(size=(40, 8))
+        f /= np.maximum(np.linalg.norm(f, axis=1, keepdims=True), 1e-12)
+        s = rng.uniform(0.1, 1.0, size=40)
+        req = RerankRequest(scores=jnp.asarray(s, jnp.float64),
+                            feats=jnp.asarray(f, jnp.float64))
+        rr = Reranker(
+            DPPRerankConfig(slate_size=6, shortlist=32, alpha=3.0,
+                            chunk_size=3),
+            router_config=RouterConfig(slots=2, chunk_size=3,
+                                       max_candidates=32),
+        )
+        ei, ed = (np.asarray(x) for x in rr.rerank(req))
+        h = rr.submit(req)
+        rr.router.drain()
+        gi, gd = h.result()
+        np.testing.assert_array_equal(gi, ei)
+        np.testing.assert_allclose(gd, ed, rtol=1e-9, atol=1e-12)
+    finally:
+        if restore:
+            jax.config.update("jax_enable_x64", False)
+
+
+def test_router_rejects_mixed_precision():
+    rr = Reranker(
+        DPPRerankConfig(slate_size=6, shortlist=32, alpha=3.0,
+                        chunk_size=3),
+        router_config=RouterConfig(slots=2, chunk_size=3,
+                                   max_candidates=32),
+    )
+    rng = np.random.default_rng(9)
+    f32 = rng.normal(size=(24, 8)).astype(np.float32)
+    s32 = rng.uniform(0.1, 1.0, size=24).astype(np.float32)
+    rr.submit(RerankRequest(scores=s32, feats=f32))
+    with pytest.raises(ValueError, match="one router serves one model"):
+        rr.submit(RerankRequest(scores=s32.astype(np.float64),
+                                feats=f32.astype(np.float64)))
+
+
+# ---------------------------------------------------------------------------
+# Seam regression: construction-time shared-M validation
+# ---------------------------------------------------------------------------
+
+
+def test_request_rejects_disagreeing_m():
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.uniform(size=40).astype(np.float32))
+    f = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
+    with pytest.raises(ValueError, match="candidate count"):
+        RerankRequest(scores=s, feats=f[:30])
+    with pytest.raises(ValueError, match="candidate count"):
+        RerankRequest(scores=s, feats=f, mask=jnp.ones((30,), bool))
+    # batched: B must agree too
+    sb = jnp.stack([s, s])
+    with pytest.raises(ValueError, match="user batch"):
+        RerankRequest(scores=sb, feats=jnp.stack([f, f, f]))
+    with pytest.raises(ValueError, match="user batch"):
+        RerankRequest(scores=sb, feats=f, mask=jnp.ones((3, 40), bool))
+    # the good shapes still construct
+    RerankRequest(scores=s, feats=f, mask=jnp.ones((40,), bool))
+    RerankRequest(scores=sb, feats=f)
+
+
+# ---------------------------------------------------------------------------
+# Seam regression: stream stops dispatching after the eps-stop latch
+# ---------------------------------------------------------------------------
+
+
+def test_stream_stops_dispatching_after_eps_stop(fresh_obs):
+    # rank-2 pool again: the slate eps-stops on pick 3 of 8, strictly
+    # inside the first chunk — the generator must not launch the
+    # remaining ceil(8/3) - 1 dead chunks
+    rng = np.random.default_rng(17)
+    basis = np.linalg.qr(rng.normal(size=(8, 2)))[0]
+    f = (rng.normal(size=(16, 2)) @ basis.T).astype(np.float32)
+    f /= np.maximum(np.linalg.norm(f, axis=1, keepdims=True), 1e-12)
+    s = rng.uniform(0.1, 1.0, size=16).astype(np.float32)
+    req = RerankRequest(scores=jnp.asarray(s), feats=jnp.asarray(f))
+
+    cfg = DPPRerankConfig(slate_size=8, shortlist=16, alpha=3.0,
+                          chunk_size=3)
+    chunks = [np.asarray(c) for c, _ in Reranker(cfg).stream(req)]
+    assert len(chunks) == 1  # stopped chunk yielded, then no more
+    assert (chunks[0] >= 0).sum() == 2
+    snap = fresh_obs.registry.snapshot()
+    assert sum(snap["counters"]["greedy_chunks_total"].values()) == 1
